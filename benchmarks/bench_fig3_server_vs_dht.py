@@ -1,0 +1,66 @@
+"""Paper Fig. 3: the fully distributed DHT vs the server-based (DAOS-like)
+key-value store — client-count sweep showing the central-server bottleneck
+vs distributed scaling."""
+from __future__ import annotations
+
+import jax
+
+from repro.core import DHTConfig, dht_create, dht_read, dht_write
+from repro.core.server_kv import server_create, server_read, server_write
+
+from .common import RT_LAT, SW_OVERHEAD, Row, make_keys_vals, modeled_ops, time_fn
+
+
+def run(quick: bool = True):
+    rows = []
+    client_counts = (12, 48) if quick else (12, 24, 36, 48, 60, 72)
+    ops_per_client = 256 if quick else 1024
+    for clients in client_counts:
+        n = clients * ops_per_client
+        keys, vals = make_keys_vals(n, seed=clients)
+        # distributed: one shard per client (the paper's architecture)
+        cfg = DHTConfig(n_shards=clients, buckets_per_shard=1 << 13,
+                        mode="coarse", capacity=max(n // clients, 64))
+        w = jax.jit(lambda t, k, v: dht_write(t, k, v), donate_argnums=(0,))
+        r = jax.jit(lambda t, k: dht_read(t, k))
+        t_w, _ = time_fn(lambda: w(dht_create(cfg), keys, vals), iters=2)
+        filled, _ = dht_write(dht_create(cfg), keys, vals)
+        t_r, _ = time_fn(lambda: r(filled, keys), iters=2)
+
+        # server-based: every op is an RPC into one node (24 cores)
+        scfg = DHTConfig(n_shards=clients, buckets_per_shard=1 << 13)
+        sw = jax.jit(lambda t, k, v: server_write(t, k, v), donate_argnums=(0,))
+        sr = jax.jit(lambda t, k: server_read(t, k))
+        t_sw, _ = time_fn(lambda: sw(server_create(scfg), keys, vals), iters=2)
+        sfilled, _ = server_write(server_create(scfg), keys, vals)
+        t_sr, _ = time_fn(lambda: sr(sfilled, keys), iters=2)
+
+        # derived model: distributed scales with clients; the server path
+        # serializes on its service width (the flat DAOS curves of Fig. 3)
+        d_read = modeled_ops(clients, 3.0)  # coarse: lock+get+unlock
+        d_write = modeled_ops(clients, 4.0)
+        server_width = 24
+        s_read = min(modeled_ops(clients, 2.0),
+                     server_width / (2.0 * RT_LAT + SW_OVERHEAD))
+        s_write = min(modeled_ops(clients, 3.0),
+                      server_width / (3.0 * RT_LAT + SW_OVERHEAD))
+        rows += [
+            Row(f"fig3/dht/read/clients{clients}", t_r / n * 1e6,
+                f"measured_mops={n / t_r / 1e6:.3f};modeled_mops={d_read / 1e6:.2f}"),
+            Row(f"fig3/dht/write/clients{clients}", t_w / n * 1e6,
+                f"measured_mops={n / t_w / 1e6:.3f};modeled_mops={d_write / 1e6:.2f}"),
+            Row(f"fig3/server/read/clients{clients}", t_sr / n * 1e6,
+                f"measured_mops={n / t_sr / 1e6:.3f};modeled_mops={s_read / 1e6:.2f}"),
+            Row(f"fig3/server/write/clients{clients}", t_sw / n * 1e6,
+                f"measured_mops={n / t_sw / 1e6:.3f};modeled_mops={s_write / 1e6:.2f}"),
+        ]
+    return rows
+
+
+def main(quick: bool = True):
+    for r in run(quick):
+        print(r.csv())
+
+
+if __name__ == "__main__":
+    main(False)

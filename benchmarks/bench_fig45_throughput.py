@@ -1,0 +1,97 @@
+"""Paper Figs. 4/5 + Table 1: read/write throughput of the three DHT
+consistency modes under uniform and zipfian keys, vs shard count.
+
+Measured: CPU wall time of the jitted batched ops over virtual shards
+(ordering + scaling shape are the claims).  Derived: modeled ops/s at the
+paper's 640 ranks from the per-op round-trip counts the stats report.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core import DHTConfig, dht_create, dht_read, dht_write
+from repro.core.layout import MODES
+
+from .common import PAPER_RANKS, Row, make_keys_vals, modeled_ops, time_fn
+
+
+def _rts_per_op(mode: str, op: str, rounds: float) -> float:
+    """Round trips per op: lock-free read=1, write=2 (probe+put); locked
+    modes add 2 lock RTs per serialization round (paper §3.5: the lock
+    traffic is what kills throughput under contention)."""
+    base = 1.0 if op == "read" else 2.0
+    if mode == "lockfree":
+        return base
+    return base + 2.0 * max(rounds, 1.0)
+
+
+def run(quick: bool = True):
+    rows = []
+    shard_counts = (8, 32) if quick else (8, 16, 32, 64)
+    n_ops = 4096 if quick else 16384
+    for dist in ("uniform", "zipf"):
+        for s in shard_counts:
+            for mode in MODES:
+                # zipf x locked: the hot key serializes ~60% of the batch;
+                # use a smaller batch with FULL capacity so no op is dropped
+                # and the serialization depth is faithful (throughput is
+                # per-op, so the batch size cancels)
+                n = 512 if (dist == "zipf" and mode != "lockfree") else n_ops
+                keys, vals = make_keys_vals(n, dist=dist, seed=s)
+                cfg = DHTConfig(n_shards=s, buckets_per_shard=1 << 13,
+                                mode=mode, capacity=n)
+                write = jax.jit(lambda t, k, v: dht_write(t, k, v),
+                                donate_argnums=(0,))
+                read = jax.jit(lambda t, k: dht_read(t, k))
+
+                def write_once():
+                    return write(dht_create(cfg), keys, vals)
+
+                t_w, (_, wstats) = time_fn(write_once, iters=2, warmup=1)
+                filled, _ = dht_write(dht_create(cfg), keys, vals)
+                t_r, (_, _, found, rstats) = time_fn(
+                    lambda: read(filled, keys), iters=2, warmup=1)
+                w_rounds = float(wstats["rounds"])
+                for op, t in (("read", t_r), ("write", t_w)):
+                    rounds = w_rounds if op == "write" else (
+                        0.0 if mode == "lockfree" else 1.0)
+                    rts = _rts_per_op(mode, op, rounds)
+                    d = modeled_ops(PAPER_RANKS, rts)
+                    rows.append(Row(
+                        f"fig45/{dist}/{op}/{mode}/shards{s}",
+                        t / n * 1e6,
+                        f"measured_mops={n / t / 1e6:.3f};"
+                        f"modeled_mops_640={d / 1e6:.2f};rounds={rounds:.0f}",
+                    ))
+    return rows
+
+
+def table1(rows) -> list[Row]:
+    """Write-only at the largest shard count (paper Table 1)."""
+    out = []
+    biggest = max(int(r.name.rsplit("shards", 1)[1]) for r in rows)
+    for dist in ("uniform", "zipf"):
+        per_mode = {}
+        for mode in MODES:
+            for r in rows:
+                if r.name == f"fig45/{dist}/write/{mode}/shards{biggest}":
+                    per_mode[mode] = r
+        lf = per_mode["lockfree"].us_per_call
+        for mode, r in per_mode.items():
+            ratio = r.us_per_call / lf
+            out.append(Row(
+                f"table1/{dist}/write/{mode}",
+                r.us_per_call,
+                f"slowdown_vs_lockfree={ratio:.1f}x;{r.derived}",
+            ))
+    return out
+
+
+def main(quick: bool = True):
+    rows = run(quick)
+    for r in rows + table1(rows):
+        print(r.csv())
+
+
+if __name__ == "__main__":
+    main(False)

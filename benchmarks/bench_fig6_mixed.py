@@ -1,0 +1,61 @@
+"""Paper Fig. 6: mixed 95% read / 5% write workload, uniform and zipfian."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import DHTConfig, dht_create, dht_read, dht_write
+from repro.core.layout import MODES
+
+from .common import PAPER_RANKS, Row, make_keys_vals, modeled_ops, time_fn
+
+
+def run(quick: bool = True):
+    rows = []
+    n_ops = 4096 if quick else 16384
+    shards = 32
+    rng = np.random.default_rng(7)
+    is_read = rng.random(n_ops) < 0.95
+    for dist in ("uniform", "zipf"):
+        keys, vals = make_keys_vals(n_ops, dist=dist, seed=11)
+        for mode in MODES:
+            cfg = DHTConfig(n_shards=shards, buckets_per_shard=1 << 13,
+                            mode=mode, capacity=max(n_ops // shards, 64))
+
+            read_mask = jnp.asarray(is_read)
+
+            @jax.jit
+            def mixed(table):
+                table, w = dht_write(table, keys, vals, valid=~read_mask)
+                table, _, found, r = dht_read(table, keys, valid=read_mask)
+                return table, w, r
+
+            def once():
+                t = dht_create(cfg)
+                # preload so reads mostly hit (paper reads previously
+                # written entries)
+                t, _ = dht_write(t, keys, vals)
+                return mixed(t)
+
+            t_m, (_, wstats, rstats) = time_fn(once, iters=2, warmup=1)
+            rounds = float(wstats["rounds"])
+            rts = 0.95 * (1 if mode == "lockfree" else 3) + 0.05 * (
+                2 if mode == "lockfree" else 2 + 2 * max(rounds, 1))
+            rows.append(Row(
+                f"fig6/{dist}/mixed95r5w/{mode}",
+                t_m / n_ops * 1e6,
+                f"measured_mops={n_ops / t_m / 1e6:.3f};"
+                f"modeled_mops_640={modeled_ops(PAPER_RANKS, rts) / 1e6:.2f};"
+                f"write_rounds={rounds:.0f}",
+            ))
+    return rows
+
+
+def main(quick: bool = True):
+    for r in run(quick):
+        print(r.csv())
+
+
+if __name__ == "__main__":
+    main(False)

@@ -1,0 +1,55 @@
+"""Paper Fig. 7 + Table 3: POET-analogue runtime with and without the DHT
+surrogate, for all three consistency modes."""
+from __future__ import annotations
+
+from examples.poet_reactive_transport import PoetConfig, run_simulation
+
+from .common import Row
+
+
+def run(quick: bool = True):
+    rows = []
+    # quick mode keeps the grid at full width (the surrogate only pays off
+    # when per-step chemistry cost >> DHT lookup overhead, as in the paper
+    # where PHREEQC is ~ms/cell) but runs fewer steps
+    cfg = PoetConfig(nx=50, ny=150, n_steps=30, solver_iters=2000) if quick \
+        else PoetConfig(nx=50, ny=150, n_steps=50, solver_iters=2000)
+    ref = run_simulation(cfg, use_dht=False)
+    rows.append(Row(
+        "fig7/reference",
+        ref["wall_s"] / cfg.n_steps * 1e6,
+        f"wall_s={ref['wall_s']:.2f};chem_calls={ref['chem_calls']}",
+    ))
+    import dataclasses
+
+    # NOTE on measured vs modeled: on this 1-core harness the emulated lock
+    # round-trips are nearly free while the lock-free checksums cost real
+    # compute, so measured walltime can invert the paper's mode ordering.
+    # The paper's point (§3.5) is that lock *network traffic* dominates on
+    # a cluster: rt_per_op below prices that, restoring the ordering.
+    from .common import RT_LAT
+
+    for mode, rt_read, rt_write in (("lockfree", 1, 2),
+                                    ("fine", 3, 6), ("coarse", 3, 6)):
+        r = run_simulation(dataclasses.replace(cfg, dht_mode=mode),
+                           use_dht=True)
+        gain = (ref["wall_s"] - r["wall_s"]) / ref["wall_s"] * 100
+        n_req = r["hits"] + r["misses"]
+        rt_s = (n_req * rt_read + r["chem_calls"] * rt_write) * RT_LAT
+        rows.append(Row(
+            f"fig7/dht_{mode}",
+            r["wall_s"] / cfg.n_steps * 1e6,
+            f"wall_s={r['wall_s']:.2f};gain_pct={gain:.1f};"
+            f"hit_rate={r['hit_rate']:.3f};chem_calls={r['chem_calls']};"
+            f"mismatches={r['mismatches']};modeled_rt_s={rt_s:.3f}",
+        ))
+    return rows
+
+
+def main(quick: bool = True):
+    for r in run(quick):
+        print(r.csv())
+
+
+if __name__ == "__main__":
+    main(False)

@@ -1,0 +1,74 @@
+"""Kernel microbenchmarks: interpret-mode Pallas vs the jnp oracle, with
+derived TPU estimates (the kernels are TPU-targeted; interpret mode on CPU
+validates semantics, not speed)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import DHTConfig, dht_create, dht_write
+from repro.core.hashing import base_bucket, hash64
+from repro.kernels import ops, ref
+
+from .common import Row, time_fn
+
+
+def _derived_tpu(bytes_touched: int, flops: int) -> str:
+    """Roofline estimate on a v5e chip for the kernel's tile traffic."""
+    t_mem = bytes_touched / 819e9
+    t_cmp = flops / 197e12
+    t = max(t_mem, t_cmp)
+    return f"tpu_est_us={t * 1e6:.2f};bytes={bytes_touched};flops={flops}"
+
+
+def run(quick: bool = True):
+    rows = []
+    n = 4096 if quick else 65536
+    rng = np.random.default_rng(0)
+    keys = jnp.asarray(rng.integers(0, 2**31, size=(n, 20)), jnp.uint32)
+    vals = jnp.asarray(rng.integers(0, 2**31, size=(n, 26)), jnp.uint32)
+
+    t_k, _ = time_fn(lambda: ops.hash64(keys), iters=2)
+    t_o, _ = time_fn(lambda: ref.ref_hash64(keys), iters=2)
+    rows.append(Row("kernels/hash64/pallas_interp", t_k / n * 1e6,
+                    _derived_tpu(n * (80 + 8), n * 20 * 2 * 12)))
+    rows.append(Row("kernels/hash64/jnp_oracle", t_o / n * 1e6, "oracle"))
+
+    t_k, _ = time_fn(lambda: ops.checksum(keys, vals), iters=2)
+    t_o, _ = time_fn(lambda: ref.ref_checksum(keys, vals), iters=2)
+    rows.append(Row("kernels/checksum/pallas_interp", t_k / n * 1e6,
+                    _derived_tpu(n * (184 + 4), n * 46 * 12)))
+    rows.append(Row("kernels/checksum/jnp_oracle", t_o / n * 1e6, "oracle"))
+
+    x = jnp.asarray(rng.uniform(-100, 100, size=(n,)), jnp.float32)
+    t_k, _ = time_fn(lambda: ops.round_sig(x, 4), iters=2)
+    t_o, _ = time_fn(lambda: ref.ref_round_sig(x, 4), iters=2)
+    rows.append(Row("kernels/round_sig/pallas_interp", t_k / n * 1e6,
+                    _derived_tpu(n * 8, n * 8)))
+    rows.append(Row("kernels/round_sig/jnp_oracle", t_o / n * 1e6, "oracle"))
+
+    nq = 128 if quick else 1024
+    cfg = DHTConfig(n_shards=1, buckets_per_shard=1 << 12)
+    st = dht_create(cfg)
+    st, _ = dht_write(st, keys[:512], vals[:512])
+    hi, lo = hash64(keys[:nq])
+    base = base_bucket(lo, cfg.buckets_per_shard, cfg.n_probe)
+    t_k, _ = time_fn(lambda: ops.probe(st.keys[0], st.vals[0], st.meta[0],
+                                       st.csum[0], keys[:nq], base), iters=2)
+    t_o, _ = time_fn(lambda: ref.ref_probe(st.keys[0], st.vals[0], st.meta[0],
+                                           st.csum[0], keys[:nq], base, 6),
+                     iters=2)
+    per_q_bytes = 6 * (80 + 104 + 8) + 80
+    rows.append(Row("kernels/probe/pallas_interp", t_k / nq * 1e6,
+                    _derived_tpu(nq * per_q_bytes, nq * 6 * 46 * 12)))
+    rows.append(Row("kernels/probe/jnp_oracle", t_o / nq * 1e6, "oracle"))
+    return rows
+
+
+def main(quick: bool = True):
+    for r in run(quick):
+        print(r.csv())
+
+
+if __name__ == "__main__":
+    main(False)

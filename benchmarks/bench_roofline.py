@@ -1,0 +1,64 @@
+"""Roofline table from the dry-run artifacts (results/dryrun/*.json):
+the three terms per (arch x shape x mesh), dominant bottleneck, and the
+MODEL_FLOPS / HLO_FLOPs useful ratio.  See EXPERIMENTS.md §Roofline."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.roofline.analysis import Roofline
+
+from .common import Row
+
+DRYRUN_DIR = os.environ.get("DRYRUN_DIR", "results/dryrun")
+
+
+def load_cells(d=None):
+    cells = []
+    for f in sorted(glob.glob(os.path.join(d or DRYRUN_DIR, "*.json"))):
+        cells.append(json.load(open(f)))
+    return cells
+
+
+def roofline_of(cell) -> Roofline:
+    chips = cell["chips"]
+    ca = cell["cost_per_device"]
+    coll = sum(cell["collective_bytes_per_device"].values())
+    return Roofline(
+        flops=ca.get("flops", 0.0) * chips,
+        hbm_bytes=ca.get("bytes accessed", 0.0) * chips,
+        coll_bytes=coll * chips,
+        chips=chips,
+        model_flops=cell["model_flops"],
+    )
+
+
+def run(quick: bool = True):
+    rows = []
+    for cell in load_cells():
+        name = f"roofline/{cell['arch']}/{cell['shape']}/{cell['mesh']}"
+        if cell.get("skipped"):
+            rows.append(Row(name, 0.0, f"SKIP:{cell['reason'][:60]}"))
+            continue
+        if not cell.get("ok"):
+            rows.append(Row(name, 0.0, f"FAIL:{cell.get('error', '?')[:60]}"))
+            continue
+        r = roofline_of(cell)
+        rows.append(Row(
+            name,
+            r.step_time * 1e6,
+            f"bottleneck={r.bottleneck};t_comp={r.t_compute:.3e};"
+            f"t_mem={r.t_memory:.3e};t_coll={r.t_collective:.3e};"
+            f"useful={r.useful_ratio:.2f};mfu_bound={r.mfu:.3f}",
+        ))
+    return rows
+
+
+def main(quick: bool = True):
+    for r in run(quick):
+        print(r.csv())
+
+
+if __name__ == "__main__":
+    main(False)

@@ -1,0 +1,50 @@
+"""Paper §6 future work: "experiments with different sizes of data values".
+
+Sweeps the DHT value size from 8 B to 1 KiB at the paper's 80-byte keys,
+lock-free mode — per-op cost grows with the value payload (checksum spans
+key||value, and the value rides both routing exchanges)."""
+from __future__ import annotations
+
+import jax
+
+from repro.core import DHTConfig, dht_create, dht_read, dht_write
+
+from .common import PAPER_RANKS, Row, make_keys_vals, modeled_ops, time_fn
+
+
+def run(quick: bool = True):
+    rows = []
+    n_ops = 2048 if quick else 8192
+    val_words = (2, 8, 26, 64, 256) if not quick else (2, 26, 128)
+    for vw in val_words:
+        keys, vals = make_keys_vals(n_ops, vw=vw, seed=vw)
+        cfg = DHTConfig(key_words=20, val_words=vw, n_shards=16,
+                        buckets_per_shard=1 << 13, capacity=n_ops)
+        write = jax.jit(lambda t, k, v: dht_write(t, k, v), donate_argnums=(0,))
+        read = jax.jit(lambda t, k: dht_read(t, k))
+        t_w, _ = time_fn(lambda: write(dht_create(cfg), keys, vals), iters=2)
+        filled, _ = dht_write(dht_create(cfg), keys, vals)
+        t_r, _ = time_fn(lambda: read(filled, keys), iters=2)
+        # modeled: payload rides 1 (read) / 2 (write) RTs; RT latency grows
+        # with message size beyond ~256 B on RDMA (linear bandwidth term)
+        bytes_v = vw * 4
+        bw = 400e9 / 8  # NDR per-port
+        rt_extra = bytes_v / bw
+        d_r = modeled_ops(PAPER_RANKS, 1 + rt_extra / 2.2e-6)
+        d_w = modeled_ops(PAPER_RANKS, 2 * (1 + rt_extra / 2.2e-6))
+        rows.append(Row(f"valsize/{bytes_v}B/read", t_r / n_ops * 1e6,
+                        f"measured_mops={n_ops / t_r / 1e6:.3f};"
+                        f"modeled_mops_640={d_r / 1e6:.2f}"))
+        rows.append(Row(f"valsize/{bytes_v}B/write", t_w / n_ops * 1e6,
+                        f"measured_mops={n_ops / t_w / 1e6:.3f};"
+                        f"modeled_mops_640={d_w / 1e6:.2f}"))
+    return rows
+
+
+def main(quick: bool = True):
+    for r in run(quick):
+        print(r.csv())
+
+
+if __name__ == "__main__":
+    main(False)

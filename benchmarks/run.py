@@ -1,0 +1,66 @@
+"""Benchmark runner: one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV.
+
+    PYTHONPATH=src:. python -m benchmarks.run [--full]
+"""
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-sized sweeps (slow on 1 CPU core)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench names (e.g. fig45,kernels)")
+    args = ap.parse_args()
+    quick = not args.full
+
+    from . import (
+        bench_fig3_server_vs_dht,
+        bench_fig45_throughput,
+        bench_fig6_mixed,
+        bench_fig7_poet,
+        bench_kernels,
+        bench_roofline,
+        bench_table2_mismatch,
+        bench_value_sizes,
+    )
+
+    benches = {
+        "fig3": bench_fig3_server_vs_dht,
+        "fig45": bench_fig45_throughput,
+        "fig6": bench_fig6_mixed,
+        "table2": bench_table2_mismatch,
+        "fig7": bench_fig7_poet,
+        "valsize": bench_value_sizes,
+        "kernels": bench_kernels,
+        "roofline": bench_roofline,
+    }
+    selected = (args.only.split(",") if args.only else list(benches))
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in selected:
+        mod = benches[name]
+        t0 = time.perf_counter()
+        try:
+            rows = mod.run(quick)
+            if name == "fig45":
+                rows = rows + mod.table1(rows)
+            for r in rows:
+                print(r.csv())
+        except Exception as e:
+            failures += 1
+            print(f"{name},NaN,ERROR:{type(e).__name__}:{e}")
+            traceback.print_exc(file=sys.stderr)
+        print(f"# {name} done in {time.perf_counter() - t0:.1f}s",
+              file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,301 @@
+"""POET-analogue coupled reactive transport simulation with the DHT as
+surrogate model (paper §5.4, Fig. 7, Tables 3/4).
+
+Physics (a faithful miniature of POET's calcite–dolomite setup):
+  - 2-D grid, explicit upwind advection with constant flux; magnesium
+    chloride injected at the top-left boundary.
+  - Per-cell kinetic chemistry (the PHREEQC stand-in): a deliberately
+    expensive damped fixed-point solver for calcite dissolution + dolomite
+    precipitation.  As Mg2+ arrives, calcite dissolves and dolomite
+    precipitates; when calcite is exhausted dolomite redissolves.
+
+Surrogate integration exactly as the paper: the 9 species + dt are rounded
+to ``sig_digits`` significant digits -> 80-byte DHT key; the value is the
+exact 13-double solver output (104 bytes).  A sharp reaction front means
+most cells repeat already-seen states -> high hit rate -> the expensive
+solver runs only for the miss subset (bucketed to power-of-two batch sizes
+to bound recompilation).
+
+    PYTHONPATH=src:. python examples/poet_reactive_transport.py
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import DHTConfig, SurrogateConfig
+from repro.core.layout import dht_create, pack_floats, unpack_floats
+from repro.core.surrogate import make_keys
+from repro.core import dht_read, dht_write
+
+N_IN = 10    # 9 species + dt        -> 80-byte key  (paper §5.4)
+N_OUT = 13   # 9 new species + 4 rate diagnostics -> 104-byte value
+
+# species vector layout
+MG, CA, CL, CO3, H, ALK, CALCITE, DOLOMITE, TEMP = range(9)
+
+
+@dataclasses.dataclass
+class PoetConfig:
+    nx: int = 50
+    ny: int = 150
+    n_steps: int = 50
+    dt: float = 0.25
+    vx: float = 0.35           # advection velocity (cells/step, x)
+    vy: float = 0.18
+    sig_digits: int = 3
+    # kinetic sub-stepping depth: sized so per-cell chemistry costs what a
+    # PHREEQC call costs (~0.1-1 ms/cell) — the regime the paper operates in
+    solver_iters: int = 2000
+    dht_mode: str = "lockfree"
+    dht_shards: int = 8
+    dht_buckets: int = 1 << 14
+    inj_mg: float = 2.0        # injected MgCl2
+    inj_cl: float = 4.0
+
+
+def initial_state(cfg: PoetConfig) -> jnp.ndarray:
+    """(nx*ny, 9) equilibrated calcite-bearing state."""
+    n = cfg.nx * cfg.ny
+    s = np.zeros((n, 9), np.float32)
+    s[:, MG] = 1e-3
+    s[:, CA] = 0.4
+    s[:, CL] = 1e-3
+    s[:, CO3] = 0.4
+    s[:, H] = 1e-7
+    s[:, ALK] = 0.8
+    s[:, CALCITE] = 1.0
+    s[:, DOLOMITE] = 0.0
+    s[:, TEMP] = 25.0
+    return jnp.asarray(s)
+
+
+# ---------------------------------------------------------------------------
+# chemistry: the PHREEQC stand-in (expensive on purpose)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("iters",))
+def chemistry(inputs: jnp.ndarray, iters: int = 60) -> jnp.ndarray:
+    """(n, 10) [species(9), dt] -> (n, 13) [species'(9), rates(4)].
+
+    Damped fixed-point iteration on calcite/dolomite kinetics:
+      calcite:  CaCO3 <-> Ca + CO3            (K_cal)
+      dolomite: CaMg(CO3)2 <-> Ca + Mg + 2CO3 (K_dol)
+    """
+    s = inputs[:, :9]
+    dt = inputs[:, 9:10]
+    # rates fast enough that swept cells converge to a fixed point within a
+    # few transport steps — the sharp-front regime that gives POET its
+    # ~92% hit rate (far field and fully reacted zone repeat their keys)
+    k_cal, k_dol = 8.0, 4.8
+    K_cal, K_dol = 0.16, 0.02
+
+    def body(_, st):
+        mg, ca, co3 = st[:, MG], st[:, CA], st[:, CO3]
+        cal, dol = st[:, CALCITE], st[:, DOLOMITE]
+        # saturation indices
+        omega_cal = (ca * co3) / K_cal
+        omega_dol = (ca * mg * co3 * co3) / K_dol
+        r_cal = k_cal * (1.0 - omega_cal)            # >0: dissolution
+        r_cal = jnp.where(cal <= 0.0, jnp.minimum(r_cal, 0.0), r_cal)
+        r_dol = k_dol * (omega_dol - 1.0)            # >0: precipitation
+        r_dol = jnp.where(dol <= 0.0, jnp.maximum(r_dol, 0.0), r_dol)
+        scale = dt[:, 0] / iters
+        d_cal = -r_cal * scale
+        d_dol = r_dol * scale
+        new = st
+        new = new.at[:, CALCITE].set(jnp.maximum(cal + d_cal, 0.0))
+        new = new.at[:, DOLOMITE].set(jnp.maximum(dol + d_dol, 0.0))
+        new = new.at[:, CA].set(jnp.maximum(ca - d_cal - d_dol, 1e-9))
+        new = new.at[:, MG].set(jnp.maximum(mg - d_dol, 1e-9))
+        new = new.at[:, CO3].set(jnp.maximum(co3 - d_cal - 2 * d_dol, 1e-9))
+        new = new.at[:, ALK].set(jnp.maximum(new[:, CO3] * 2.0, 1e-9))
+        return new
+
+    out = jax.lax.fori_loop(0, iters, body, s)
+    mg, ca, co3 = out[:, MG], out[:, CA], out[:, CO3]
+    rates = jnp.stack([
+        (ca * co3) / K_cal,
+        (ca * mg * co3 * co3) / K_dol,
+        out[:, CALCITE] - s[:, CALCITE],
+        out[:, DOLOMITE] - s[:, DOLOMITE],
+    ], axis=-1)
+    return jnp.concatenate([out, rates], axis=-1).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# transport: explicit upwind advection (constant fluxes)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("nx", "ny"))
+def advect(state: jnp.ndarray, nx: int, ny: int, vx: float, vy: float,
+           inj_mg: float, inj_cl: float) -> jnp.ndarray:
+    grid = state.reshape(nx, ny, 9)
+    solutes = [MG, CA, CL, CO3, H, ALK]
+    g = grid
+    for sp in solutes:
+        c = g[:, :, sp]
+        up_x = jnp.concatenate([c[:1, :], c[:-1, :]], axis=0)
+        up_y = jnp.concatenate([c[:, :1], c[:, :-1]], axis=1)
+        c_new = c - vx * (c - up_x) - vy * (c - up_y)
+        g = g.at[:, :, sp].set(c_new)
+    # constant injection at the top-left boundary (paper: MgCl2 inflow)
+    inj_x, inj_y = max(nx // 16, 1), max(ny // 16, 1)
+    g = g.at[:inj_x, :inj_y, MG].set(inj_mg)
+    g = g.at[:inj_x, :inj_y, CL].set(inj_cl)
+    return g.reshape(nx * ny, 9)
+
+
+# ---------------------------------------------------------------------------
+# the coupled loop with the DHT surrogate
+# ---------------------------------------------------------------------------
+
+def _pow2_bucket(n: int, lo: int = 64) -> int:
+    b = lo
+    while b < n:
+        b *= 2
+    return b
+
+
+def run_simulation(cfg: PoetConfig, use_dht: bool = True,
+                   verbose: bool = False) -> dict:
+    n = cfg.nx * cfg.ny
+    state = initial_state(cfg)
+    scfg = SurrogateConfig(
+        n_inputs=N_IN, n_outputs=N_OUT, sig_digits=cfg.sig_digits,
+        dht=DHTConfig(key_words=20, val_words=26, n_shards=cfg.dht_shards,
+                      buckets_per_shard=cfg.dht_buckets, mode=cfg.dht_mode))
+    table = dht_create(scfg.dht)
+
+    chem = partial(chemistry, iters=cfg.solver_iters)
+    # jit the DHT data path once, donating the table so bucket updates are
+    # in-place (without donation every write copies the whole slab)
+    read_jit = jax.jit(
+        lambda t, x, v: dht_read(t, make_keys(scfg, x), valid=v),
+        donate_argnums=(0,))
+    write_jit = jax.jit(
+        lambda t, x, o, v: dht_write(
+            t, make_keys(scfg, x), pack_floats(o, scfg.dht.val_words), valid=v),
+        donate_argnums=(0,))
+    # pre-grouping key: rounded to fixed decimals (finer than the sig-digit
+    # key rounding for this system, so grouping never merges distinct keys)
+    group_key = jax.jit(lambda x: jnp.round(x * 1e6) / 1e6)
+    READ_BUCKET, MISS_BUCKET = 2048, 512
+    hits = misses = chem_calls = mismatches = 0
+
+    # warm the compiled paths: the paper's 500-step production runs amortize
+    # XLA compilation; one-time compiles are excluded from the comparison
+    warm_state = advect(state, cfg.nx, cfg.ny, cfg.vx, cfg.vy,
+                        cfg.inj_mg, cfg.inj_cl)
+    del warm_state
+    if use_dht:
+        wk = jnp.zeros((READ_BUCKET, N_IN), jnp.float32)
+        table, *_ = read_jit(table, wk, jnp.zeros((READ_BUCKET,), bool))
+        wm = jnp.zeros((MISS_BUCKET, N_IN), jnp.float32)
+        wout = chem(wm)
+        table, _ = write_jit(table, wm, wout, jnp.zeros((MISS_BUCKET,), bool))
+        jax.block_until_ready(table.keys)
+    else:
+        jax.block_until_ready(
+            chem(jnp.zeros((n, N_IN), jnp.float32)))
+
+    t_chem = 0.0
+    t0 = time.perf_counter()
+
+    for step in range(cfg.n_steps):
+        state = advect(state, cfg.nx, cfg.ny, cfg.vx, cfg.vy,
+                       cfg.inj_mg, cfg.inj_cl)
+        inputs = jnp.concatenate(
+            [state, jnp.full((n, 1), cfg.dt, jnp.float32)], axis=1)
+
+        tc = time.perf_counter()
+        if not use_dht:
+            out = chem(inputs)
+            chem_calls += n
+        else:
+            # POET batches one DHT request per grid cell, but most cells
+            # share a rounded state — dedup first (this is also what keeps
+            # duplicate keys from overflowing one routing bin).
+            rounded = np.asarray(group_key(inputs))
+            uniq_rows, inv = np.unique(rounded, axis=0, return_inverse=True)
+            nu = uniq_rows.shape[0]
+            out_u = np.zeros((nu, N_OUT), np.float32)
+            found_np = np.zeros((nu,), bool)
+            # fixed-size buckets -> a bounded set of compiled shapes;
+            # result assembly stays on the host (numpy) — each un-jitted
+            # device op costs more in dispatch than the whole assembly
+            for lo in range(0, nu, READ_BUCKET):
+                hi_ = min(lo + READ_BUCKET, nu)
+                upad = np.zeros((READ_BUCKET, inputs.shape[1]), np.float32)
+                upad[: hi_ - lo] = uniq_rows[lo:hi_]
+                uvalid = jnp.zeros((READ_BUCKET,), bool).at[: hi_ - lo].set(True)
+                table, vals_w, found, rstats = read_jit(
+                    table, jnp.asarray(upad), uvalid)
+                found_np[lo:hi_] = np.asarray(found)[: hi_ - lo]
+                vw = np.asarray(vals_w)[: hi_ - lo]
+                out_u[lo:hi_] = np.ascontiguousarray(
+                    vw[:, 0:2 * N_OUT:2]).view(np.float32)
+                mismatches += int(rstats["mismatches"])
+            # per-cell accounting (the paper counts per-request hits)
+            hits += int(found_np[inv].sum())
+            misses += int((~found_np[inv]).sum())
+            miss_idx = np.nonzero(~found_np)[0]
+            for lo in range(0, miss_idx.size, MISS_BUCKET):
+                sel = miss_idx[lo:lo + MISS_BUCKET]
+                pad = np.zeros(MISS_BUCKET, np.int64)
+                pad[: sel.size] = sel
+                sub_in = jnp.asarray(uniq_rows[pad])
+                sub = chem(sub_in)
+                chem_calls += int(sel.size)
+                out_u[sel] = np.asarray(sub)[: sel.size]
+                valid = jnp.zeros((MISS_BUCKET,), bool).at[: sel.size].set(True)
+                table, _ = write_jit(table, sub_in, sub, valid)
+            out = jnp.asarray(out_u[inv])
+        t_chem += time.perf_counter() - tc
+        state = out[:, :9]
+        if verbose and step % 10 == 0:
+            dol = float(state[:, DOLOMITE].mean())
+            cal = float(state[:, CALCITE].mean())
+            print(f"step {step:4d} calcite {cal:.4f} dolomite {dol:.4f} "
+                  f"hits {hits} misses {misses}")
+
+    wall = time.perf_counter() - t0
+    total = hits + misses
+    return {
+        "conc": state,
+        "wall_s": wall,
+        "chem_s": t_chem,
+        "chem_calls": chem_calls,
+        "hit_rate": hits / total if total else 0.0,
+        "hits": hits,
+        "misses": misses,
+        "mismatches": mismatches,
+        "grid": (cfg.nx, cfg.ny),
+        "steps": cfg.n_steps,
+    }
+
+
+def main():
+    cfg = PoetConfig()
+    print(f"grid {cfg.nx}x{cfg.ny}, {cfg.n_steps} steps, "
+          f"sig_digits={cfg.sig_digits}")
+    ref = run_simulation(cfg, use_dht=False)
+    print(f"reference (no DHT): {ref['wall_s']:.2f}s "
+          f"({ref['chem_calls']} chemistry calls)")
+    dht = run_simulation(cfg, use_dht=True, verbose=True)
+    print(f"with lock-free DHT: {dht['wall_s']:.2f}s "
+          f"({dht['chem_calls']} chemistry calls, "
+          f"hit rate {dht['hit_rate']*100:.1f}%)")
+    gain = (ref["wall_s"] - dht["wall_s"]) / ref["wall_s"] * 100
+    print(f"performance gain: {gain:.1f}%  (paper Table 3: 14%-42%)")
+    err = float(jnp.abs(dht["conc"] - ref["conc"]).max())
+    print(f"max |Δconc| vs reference: {err:.2e} (rounding-controlled)")
+
+
+if __name__ == "__main__":
+    main()

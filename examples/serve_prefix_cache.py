@@ -1,0 +1,58 @@
+"""Serving with the DHT-backed distributed prefix cache: repeated and
+shared prompt prefixes skip their prefill (the paper's surrogate pattern
+applied to LM inference).
+
+    PYTHONPATH=src:. python examples/serve_prefix_cache.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.models import init_lm
+from repro.serving import Engine
+
+
+def main():
+    cfg = reduced(get_config("llama3-405b"), n_layers=4)
+    params = init_lm(cfg, jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, max_len=512, page_size=64, pool_pages=256,
+                 dtype=jnp.float32)
+    rng = np.random.default_rng(0)
+
+    system_prompt = rng.integers(0, cfg.vocab_size, size=192)  # shared prefix
+    def request_batch(n):
+        tails = rng.integers(0, cfg.vocab_size, size=(n, 64))
+        return np.concatenate(
+            [np.tile(system_prompt, (n, 1)), tails], axis=1).astype(np.int32)
+
+    print("batch 1: cold (no cache)")
+    b1 = request_batch(2)
+    t0 = time.perf_counter()
+    r1 = eng.generate(b1, 16)
+    t1 = time.perf_counter() - t0
+    print(f"  computed {r1.prefill_tokens_computed} cached "
+          f"{r1.prefill_tokens_cached} prefill tokens, {t1:.2f}s")
+
+    print("batch 2: same system prompt, new tails -> shared prefix hits")
+    b2 = request_batch(2)
+    t0 = time.perf_counter()
+    r2 = eng.generate(b2, 16)
+    t2 = time.perf_counter() - t0
+    print(f"  computed {r2.prefill_tokens_computed} cached "
+          f"{r2.prefill_tokens_cached} prefill tokens, {t2:.2f}s")
+
+    print("batch 3: identical to batch 2 -> full-prompt hit, zero prefill")
+    t0 = time.perf_counter()
+    r3 = eng.generate(b2, 16)
+    t3 = time.perf_counter() - t0
+    print(f"  computed {r3.prefill_tokens_computed} cached "
+          f"{r3.prefill_tokens_cached} prefill tokens, {t3:.2f}s")
+    assert (r3.tokens == r2.tokens).all(), "cached generation must be identical"
+    print("cache stats:", r3.cache_stats)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""repro: JAX/TPU reproduction of "A fast MPI-based Distributed Hash-Table
+as Surrogate Model demonstrated in a coupled reactive transport HPC
+simulation" (Luebke, De Lucia, Petri, Schnor — ICCS 2025)."""
+
+__version__ = "0.1.0"

@@ -1,0 +1,1 @@
+from .checkpoint import latest_step, rehash_dht, restore, save  # noqa: F401

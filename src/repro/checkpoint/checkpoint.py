@@ -1,0 +1,138 @@
+"""Fault-tolerant checkpointing with elastic restart.
+
+Format (shard-count independent — the manifest records *logical* arrays):
+
+    <dir>/step_<N>/manifest.json       leaf path -> (part file, shape, dtype)
+    <dir>/step_<N>/part_<k>.npz        leaf payloads, ~512 MB per part
+    <dir>/LATEST                       committed step number (atomic rename)
+
+Write protocol: stage into ``step_<N>.tmp``, fsync-ish flush, rename to
+``step_<N>``, then atomically replace LATEST — a crash at any point leaves
+either the previous or the new checkpoint fully intact, never a torn one.
+
+Elastic restart: leaves are saved as logical (global) arrays, so restoring
+onto a different mesh only changes the shardings the caller applies.  The
+DHT is special-cased: ``rehash_dht`` re-inserts live entries into a table
+with a different shard count — the paper's "resize the table on restart"
+future-work item, implemented.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import DHTConfig, DHTState, dht_create, dht_write
+from repro.core.layout import INVALID, OCCUPIED
+
+_PART_BYTES = 512 << 20
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = ["/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+             for path, _ in flat]
+    leaves = [leaf for _, leaf in flat]
+    return paths, leaves, treedef
+
+
+def save(directory: str, step: int, tree) -> str:
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    paths, leaves, _ = _flatten(tree)
+    manifest, part, part_idx, part_bytes = {}, {}, 0, 0
+    for p, leaf in zip(paths, leaves):
+        arr = np.asarray(leaf)
+        logical_dtype = str(arr.dtype)
+        if arr.dtype.kind == "V" or logical_dtype == "bfloat16":
+            arr = arr.view(np.uint16)  # npz cannot store ml_dtypes natively
+            logical_dtype = "bfloat16"
+        manifest[p] = {"part": part_idx, "shape": list(arr.shape),
+                       "dtype": logical_dtype}
+        part[p.replace("/", "__")] = arr
+        part_bytes += arr.nbytes
+        if part_bytes >= _PART_BYTES:
+            np.savez(os.path.join(tmp, f"part_{part_idx}.npz"), **part)
+            part, part_idx, part_bytes = {}, part_idx + 1, 0
+    if part:
+        np.savez(os.path.join(tmp, f"part_{part_idx}.npz"), **part)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump({"step": step, "leaves": manifest}, f)
+
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)                      # commit point 1: the payload
+    latest_tmp = os.path.join(directory, "LATEST.tmp")
+    with open(latest_tmp, "w") as f:
+        f.write(str(step))
+    os.replace(latest_tmp, os.path.join(directory, "LATEST"))  # commit point 2
+    return final
+
+
+def latest_step(directory: str) -> int | None:
+    p = os.path.join(directory, "LATEST")
+    if not os.path.exists(p):
+        return None
+    with open(p) as f:
+        return int(f.read().strip())
+
+
+def restore(directory: str, target_tree, step: int | None = None):
+    """Restore into the *structure* of target_tree (values replaced).
+    Returns (step, tree)."""
+    step = latest_step(directory) if step is None else step
+    assert step is not None, f"no checkpoint in {directory}"
+    d = os.path.join(directory, f"step_{step}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    parts: dict[int, np.lib.npyio.NpzFile] = {}
+
+    paths, leaves, treedef = _flatten(target_tree)
+    new_leaves = []
+    for p, leaf in zip(paths, leaves):
+        meta = manifest["leaves"][p]
+        k = meta["part"]
+        if k not in parts:
+            parts[k] = np.load(os.path.join(d, f"part_{k}.npz"))
+        arr = parts[k][p.replace("/", "__")]
+        assert list(arr.shape) == meta["shape"]
+        if meta["dtype"] == "bfloat16":
+            import ml_dtypes
+
+            arr = arr.view(ml_dtypes.bfloat16)
+        new_leaves.append(jnp.asarray(arr))
+    return step, jax.tree_util.tree_unflatten(treedef, new_leaves)
+
+
+# ---------------------------------------------------------------------------
+# elastic DHT resize (paper §6 future work: "resizing could be managed
+# during HPC application checkpointing, adjusting the table size on restart")
+# ---------------------------------------------------------------------------
+
+def rehash_dht(state: DHTState, new_cfg: DHTConfig) -> DHTState:
+    """Re-insert all live entries into a table of a different shape."""
+    assert new_cfg.key_words == state.cfg.key_words
+    assert new_cfg.val_words == state.cfg.val_words
+    meta = np.asarray(state.meta)
+    live = ((meta & OCCUPIED) != 0) & ((meta & INVALID) == 0)
+    keys = np.asarray(state.keys)[live]            # (n_live, KW)
+    vals = np.asarray(state.vals)[live]
+    new_state = dht_create(new_cfg)
+    if keys.shape[0] == 0:
+        return new_state
+    # batch the re-insert to bound memory
+    bs = 8192
+    for i in range(0, keys.shape[0], bs):
+        new_state, _ = dht_write(
+            new_state, jnp.asarray(keys[i:i + bs]), jnp.asarray(vals[i:i + bs]))
+    return new_state

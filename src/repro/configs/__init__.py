@@ -1,0 +1,2 @@
+from .common import LONG_CONTEXT_ARCHS, SHAPES, applicable, input_specs, reduced  # noqa: F401
+from .registry import ARCHS, all_arch_ids, get_config  # noqa: F401

@@ -1,0 +1,30 @@
+"""The paper's contribution: an MPI-DHT-style distributed hash table as a
+surrogate-model cache, adapted to JAX SPMD on TPU (see DESIGN.md)."""
+
+from .layout import (  # noqa: F401
+    DHTConfig,
+    DHTState,
+    MODE_COARSE,
+    MODE_FINE,
+    MODE_LOCKFREE,
+    dht_create,
+    dht_free,
+    occupancy,
+)
+from .dht import (  # noqa: F401
+    W_DROPPED,
+    W_EVICT,
+    W_INSERT,
+    W_UPDATE,
+    dht_read,
+    dht_write,
+)
+from .surrogate import (  # noqa: F401
+    SurrogateConfig,
+    lookup,
+    lookup_or_compute,
+    make_keys,
+    round_significant,
+    store,
+    surrogate_create,
+)

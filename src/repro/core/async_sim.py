@@ -1,0 +1,217 @@
+"""Host-level async rank simulator — reproduces the paper's torn-read /
+checksum-mismatch phenomenology (Tables 2 and 4).
+
+In the synchronous SPMD execution of ``core/dht.py`` a read can never see a
+half-written bucket.  Real one-sided RDMA can: the paper observes checksum
+mismatches exactly when concurrent writers race on zipfian-hot buckets.
+This module simulates R ranks whose read/write *sub-operations* interleave:
+a write is split into (a) publish key+first half of value, (b) publish rest
+of value + checksum + meta.  A reader scheduled between (a) and (b) sees a
+torn bucket; in lock-free mode the checksum catches it (retry, then flag
+INVALID); in the locked modes the lock prevents it (at serialization cost,
+which we count in round-trips).
+
+Pure numpy on purpose: this is a *model-level* simulator used by
+benchmarks/bench_table2_mismatch.py; the production data path is the JAX
+one.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .layout import GEN_SHIFT, INVALID, OCCUPIED, DHTConfig
+
+_C1 = 0xCC9E2D51
+_C2 = 0x1B873593
+_MASK = 0xFFFFFFFF
+
+
+def _rotl(x, r):
+    return ((x << r) | (x >> (32 - r))) & _MASK
+
+
+def _murmur32_np(words: np.ndarray, seed: int) -> np.ndarray:
+    """numpy twin of repro.core.hashing.murmur32_words (words: (..., W))."""
+    h = np.full(words.shape[:-1], seed & _MASK, dtype=np.uint64)
+    for i in range(words.shape[-1]):
+        k = words[..., i].astype(np.uint64)
+        k = (k * _C1) & _MASK
+        k = _rotl(k, 15)
+        k = (k * _C2) & _MASK
+        h ^= k
+        h = _rotl(h, 13)
+        h = (h * 5 + 0xE6546B64) & _MASK
+    h ^= words.shape[-1] * 4
+    h ^= h >> 16
+    h = (h * 0x85EBCA6B) & _MASK
+    h ^= h >> 13
+    h = (h * 0xC2B2AE35) & _MASK
+    h ^= h >> 16
+    return h.astype(np.uint32)
+
+
+def checksum_np(key_words: np.ndarray, val_words: np.ndarray) -> np.ndarray:
+    return _murmur32_np(
+        np.concatenate([key_words, val_words], axis=-1), 0xB5297A4D
+    )
+
+
+def hash64_np(key_words: np.ndarray):
+    return (
+        _murmur32_np(key_words, 0x9E3779B9),
+        _murmur32_np(key_words, 0x85EBCA77),
+    )
+
+
+@dataclasses.dataclass
+class AsyncStats:
+    reads: int = 0
+    writes: int = 0
+    hits: int = 0
+    mismatches: int = 0        # checksum divergence observed (lock-free)
+    retries: int = 0
+    invalidated: int = 0
+    torn_exposures: int = 0    # reader scheduled against a half-done write
+    lock_round_trips: int = 0  # serialization cost of the locked modes
+
+
+class AsyncDHT:
+    """R concurrent ranks over one shared table, interleaved sub-ops."""
+
+    def __init__(self, cfg: DHTConfig, seed: int = 0):
+        self.cfg = cfg
+        b = cfg.n_shards * cfg.buckets_per_shard
+        self.keys = np.zeros((b, cfg.key_words), np.uint32)
+        self.vals = np.zeros((b, cfg.val_words), np.uint32)
+        self.meta = np.zeros((b,), np.uint32)
+        self.csum = np.zeros((b,), np.uint32)
+        self.rng = np.random.default_rng(seed)
+        self.stats = AsyncStats()
+        # in-flight write second-halves: list of (bucket, key, val, csum)
+        self.pending: list[tuple[int, np.ndarray, np.ndarray, int]] = []
+
+    # -- addressing (same scheme as the JAX path) --
+    def _bucket_of(self, key: np.ndarray) -> int:
+        h_hi, h_lo = hash64_np(key[None, :])
+        shard = int(h_hi[0]) % self.cfg.n_shards
+        span = max(self.cfg.buckets_per_shard - self.cfg.n_probe + 1, 1)
+        base = int(h_lo[0]) % span
+        return shard * self.cfg.buckets_per_shard + base
+
+    def _probe(self, key: np.ndarray):
+        b0 = self._bucket_of(key)
+        for j in range(self.cfg.n_probe):
+            b = b0 + j
+            occ = self.meta[b] & OCCUPIED
+            inv = self.meta[b] & INVALID
+            if occ and not inv and np.array_equal(self.keys[b], key):
+                return b, "match"
+        for j in range(self.cfg.n_probe):
+            b = b0 + j
+            if not (self.meta[b] & OCCUPIED) or (self.meta[b] & INVALID):
+                return b, "empty"
+        return b0 + self.cfg.n_probe - 1, "evict"
+
+    # -- sub-op interleaving --
+    def write_begin(self, key: np.ndarray, val: np.ndarray):
+        """Sub-op (a): key + first half of the value land."""
+        b, _kind = self._probe(key)
+        half = self.cfg.val_words // 2
+        self.keys[b] = key
+        self.vals[b, :half] = val[:half]
+        self.meta[b] = OCCUPIED | ((((self.meta[b] >> GEN_SHIFT) + 1) << GEN_SHIFT))
+        # checksum NOT yet updated -> bucket is torn until write_commit
+        self.pending.append((b, key.copy(), val.copy(), int(checksum_np(key[None], val[None])[0])))
+        self.stats.writes += 1
+        if self.cfg.mode in ("fine", "coarse"):
+            self.stats.lock_round_trips += 2
+
+    def write_commit(self):
+        """Sub-op (b): rest of value + checksum published."""
+        if not self.pending:
+            return
+        b, key, val, cs = self.pending.pop(0)
+        half = self.cfg.val_words // 2
+        self.vals[b, half:] = val[half:]
+        self.csum[b] = cs
+        self.meta[b] &= ~np.uint32(INVALID)
+
+    def read(self, key: np.ndarray):
+        self.stats.reads += 1
+        if self.cfg.mode in ("fine", "coarse"):
+            # locks forbid reading torn buckets: behave as if serialized
+            self.stats.lock_round_trips += 2
+            for _ in range(len(self.pending)):
+                self.write_commit()
+        b, kind = self._probe(key)
+        if kind != "match":
+            return None
+        torn = any(p[0] == b for p in self.pending)
+        if torn:
+            self.stats.torn_exposures += 1
+        if self.cfg.mode == "lockfree":
+            for attempt in range(self.cfg.max_read_retries + 1):
+                ok = int(checksum_np(self.keys[b][None], self.vals[b][None])[0]) == int(self.csum[b])
+                if ok:
+                    if attempt > 0:
+                        self.stats.retries += attempt
+                    self.stats.hits += 1
+                    return self.vals[b].copy()
+                self.stats.mismatches += 1
+                # model: the racing writer may complete between retries
+                if self.pending and self.rng.random() < 0.5:
+                    self.write_commit()
+            self.meta[b] |= INVALID
+            self.stats.invalidated += 1
+            return None
+        self.stats.hits += 1
+        return self.vals[b].copy()
+
+
+def run_mixed_workload(
+    cfg: DHTConfig,
+    n_ranks: int,
+    ops_per_rank: int,
+    read_fraction: float = 0.95,
+    dist: str = "zipf",
+    zipf_skew: float = 0.99,
+    key_range: int = 712_500,
+    seed: int = 0,
+) -> AsyncStats:
+    """Paper §5.2 second experiment under interleaved async execution."""
+    rng = np.random.default_rng(seed)
+    table = AsyncDHT(cfg, seed)
+    kw = cfg.key_words
+    n_ops = n_ranks * ops_per_rank
+
+    if dist == "zipf":
+        ids = rng.zipf(zipf_skew + 1.0, size=n_ops) % key_range
+    else:
+        ids = rng.integers(0, key_range, size=n_ops)
+    is_read = rng.random(n_ops) < read_fraction
+
+    def key_of(i: int) -> np.ndarray:
+        k = np.zeros((kw,), np.uint32)
+        k[0] = np.uint32(i & _MASK)
+        k[1] = np.uint32((i >> 32) & _MASK)
+        return k
+
+    for i in range(n_ops):
+        key = key_of(int(ids[i]))
+        if is_read[i]:
+            table.read(key)
+        else:
+            val = rng.integers(0, 2**31, size=cfg.val_words).astype(np.uint32)
+            table.write_begin(key, val)
+            # async exposure window: the commit may be delayed past the next
+            # rank's operation (one-sided RDMA completes out of program order)
+            if rng.random() < 0.7:
+                table.write_commit()
+        # occasionally flush stragglers
+        if rng.random() < 0.3:
+            table.write_commit()
+    while table.pending:
+        table.write_commit()
+    return table.stats

@@ -1,0 +1,125 @@
+"""Sharded execution of the DHT over a device mesh.
+
+Every device contributes one table shard (the paper: "the parallel
+processes offer a part of their available memory").  Queries are
+device-local batches; routing crosses the *entire* mesh (all axes
+flattened), so the table behaves as one global key-value space no matter
+how the mesh is otherwise partitioned for the model (DP/TP/PP axes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from . import dht as dht_ops
+from .layout import DHTConfig, DHTState, dht_create
+
+
+def mesh_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(mesh.axis_names)
+
+
+def shard_spec(mesh: Mesh) -> P:
+    """Table shards spread over all mesh axes (flattened)."""
+    return P(mesh_axes(mesh))
+
+
+def _psum_stats(stats: dict, axes) -> dict:
+    out = {}
+    for k, v in stats.items():
+        if k == "code":
+            out[k] = v  # per-item, stays sharded
+        elif k == "rounds":
+            out[k] = jax.lax.pmax(v, axes)
+        else:
+            out[k] = jax.lax.psum(v, axes)
+    return out
+
+
+@dataclasses.dataclass
+class ShardedDHT:
+    """Jitted sharded read/write closures bound to a mesh."""
+
+    mesh: Mesh
+    cfg: DHTConfig
+    state: DHTState
+
+    @classmethod
+    def create(cls, mesh: Mesh, cfg: DHTConfig) -> "ShardedDHT":
+        n_dev = mesh.devices.size
+        assert cfg.n_shards == n_dev, (
+            f"one shard per device: n_shards={cfg.n_shards} != mesh size {n_dev}"
+        )
+        spec = shard_spec(mesh)
+        state = jax.jit(
+            dht_create,
+            static_argnums=0,
+            out_shardings=jax.tree.map(
+                lambda _: NamedSharding(mesh, spec), dht_create(cfg)
+            ),
+        )(cfg)
+        return cls(mesh=mesh, cfg=cfg, state=state)
+
+    # -- sharded ops ------------------------------------------------------
+    def _specs(self):
+        axes = mesh_axes(self.mesh)
+        sspec = shard_spec(self.mesh)
+        state_spec = jax.tree.map(lambda _: sspec, self.state)
+        batch_spec = P(axes)
+        return axes, state_spec, batch_spec
+
+    def write_fn(self):
+        axes, state_spec, batch_spec = self._specs()
+
+        def fn(state, keys, vals):
+            state, stats = dht_ops.dht_write(state, keys, vals, axis_name=axes)
+            return state, _psum_stats(stats, axes)
+
+        stats_spec = {k: (batch_spec if k == "code" else P())
+                      for k in ("inserted", "updated", "evicted", "dropped",
+                                "rounds", "lock_tokens", "code")}
+        return jax.jit(
+            jax.shard_map(
+                fn, mesh=self.mesh,
+                in_specs=(state_spec, batch_spec, batch_spec),
+                out_specs=(state_spec, stats_spec),
+                check_vma=False,
+            )
+        )
+
+    def read_fn(self):
+        axes, state_spec, batch_spec = self._specs()
+
+        def fn(state, keys):
+            state, vals, found, stats = dht_ops.dht_read(state, keys, axis_name=axes)
+            return state, vals, found, _psum_stats(stats, axes)
+
+        stats_spec = {k: P() for k in
+                      ("hits", "misses", "mismatches", "dropped", "lock_tokens")}
+        return jax.jit(
+            jax.shard_map(
+                fn, mesh=self.mesh,
+                in_specs=(state_spec, batch_spec),
+                out_specs=(state_spec, batch_spec, batch_spec, stats_spec),
+                check_vma=False,
+            )
+        )
+
+    # convenience stateful wrappers
+    def write(self, keys, vals):
+        self.state, stats = self.write_fn()(self.state, keys, vals)
+        return stats
+
+    def read(self, keys):
+        self.state, vals, found, stats = self.read_fn()(self.state, keys)
+        return vals, found, stats
+
+
+def make_mesh_1d(n: int | None = None, name: str = "dht") -> Mesh:
+    devs = jax.devices()
+    n = n or len(devs)
+    return jax.make_mesh((n,), (name,))

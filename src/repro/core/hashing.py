@@ -1,0 +1,117 @@
+"""64-bit key hashing in 2x uint32 lanes (TPU-friendly: no native u64 on the VPU).
+
+The paper derives a 64-bit hash per key, picks the owner rank with ``hash %
+nprocs`` and derives a *set* of candidate bucket indices by sliding a byte
+window over the hash (Fig. 2 of the paper).  On TPU we keep the 64-bit hash
+(as a (hi, lo) pair of independently seeded 32-bit mixes) but replace the
+scattered byte-window candidates with one *contiguous probe window* of
+``n_probe`` buckets — a single DMA-friendly VMEM block (see DESIGN.md §2).
+The byte-window variant is retained in :mod:`repro.kernels.ref` for
+comparison.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# murmur3 constants
+_C1 = 0xCC9E2D51
+_C2 = 0x1B873593
+_FMIX1 = 0x85EBCA6B
+_FMIX2 = 0xC2B2AE35
+
+# two lane seeds -> independent 32-bit hashes that together form the 64-bit hash
+SEED_HI = 0x9E3779B9
+SEED_LO = 0x85EBCA77
+
+
+def _u32(x: int) -> jnp.ndarray:
+    return jnp.uint32(x & 0xFFFFFFFF)
+
+
+def _rotl32(x: jnp.ndarray, r: int) -> jnp.ndarray:
+    r = r % 32
+    return (x << jnp.uint32(r)) | (x >> jnp.uint32(32 - r))
+
+
+def _fmix32(h: jnp.ndarray) -> jnp.ndarray:
+    h = h ^ (h >> jnp.uint32(16))
+    h = h * _u32(_FMIX1)
+    h = h ^ (h >> jnp.uint32(13))
+    h = h * _u32(_FMIX2)
+    h = h ^ (h >> jnp.uint32(16))
+    return h
+
+
+def murmur32_words(words: jnp.ndarray, seed: int) -> jnp.ndarray:
+    """murmur3-style 32-bit hash over the trailing word axis.
+
+    words: (..., W) uint32 -> (...,) uint32.  W is static; the chain is
+    unrolled (W <= ~64 in all our layouts).
+    """
+    words = words.astype(jnp.uint32)
+    w = words.shape[-1]
+    h = jnp.full(words.shape[:-1], seed & 0xFFFFFFFF, dtype=jnp.uint32)
+    for i in range(w):
+        k = words[..., i]
+        k = k * _u32(_C1)
+        k = _rotl32(k, 15)
+        k = k * _u32(_C2)
+        h = h ^ k
+        h = _rotl32(h, 13)
+        h = h * jnp.uint32(5) + _u32(0xE6546B64)
+    h = h ^ jnp.uint32(w * 4)  # length in bytes
+    return _fmix32(h)
+
+
+def hash64(key_words: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(hi, lo) uint32 pair forming the 64-bit key hash."""
+    return (
+        murmur32_words(key_words, SEED_HI),
+        murmur32_words(key_words, SEED_LO),
+    )
+
+
+def owner_shard(h_hi: jnp.ndarray, n_shards: int) -> jnp.ndarray:
+    """Paper: target_rank = hash % nprocs."""
+    return (h_hi % jnp.uint32(n_shards)).astype(jnp.int32)
+
+
+def base_bucket(h_lo: jnp.ndarray, n_buckets: int, n_probe: int) -> jnp.ndarray:
+    """Start of the contiguous probe window.
+
+    Clamped to [0, B - n_probe] so the window never wraps — the Pallas probe
+    kernel then reads one contiguous (n_probe, words) block per query.
+    """
+    span = max(n_buckets - n_probe + 1, 1)
+    return (h_lo % jnp.uint32(span)).astype(jnp.int32)
+
+
+def probe_indices(base: jnp.ndarray, n_probe: int) -> jnp.ndarray:
+    """(..., n_probe) candidate bucket indices (contiguous window)."""
+    return base[..., None] + jnp.arange(n_probe, dtype=jnp.int32)
+
+
+def byte_window_indices(
+    h_hi: jnp.ndarray, h_lo: jnp.ndarray, n_buckets: int, n_probe: int
+) -> jnp.ndarray:
+    """The paper's original candidate derivation (Fig. 2): slide a byte
+    window over the 8 hash bytes.  Used by the reference oracle only."""
+    bytes_ = []
+    for lane in (h_hi, h_lo):
+        for b in range(4):
+            bytes_.append((lane >> jnp.uint32(8 * b)) & jnp.uint32(0xFF))
+    # windows of 3 bytes, moving forward 1 byte -> up to 6 candidates
+    idx = []
+    for j in range(min(n_probe, 6)):
+        v = bytes_[j] | (bytes_[j + 1] << jnp.uint32(8)) | (bytes_[j + 2] << jnp.uint32(16))
+        idx.append((v % jnp.uint32(n_buckets)).astype(jnp.int32))
+    while len(idx) < n_probe:  # pad by rehash if caller wants more
+        idx.append(((idx[-1] + 1) % n_buckets))
+    return jnp.stack(idx, axis=-1)
+
+
+def checksum32(key_words: jnp.ndarray, val_words: jnp.ndarray) -> jnp.ndarray:
+    """Lock-free mode bucket checksum over key||value (paper §4.2, after
+    Pilaf's self-verifying structures)."""
+    both = jnp.concatenate([key_words, val_words], axis=-1)
+    return murmur32_words(both, 0xB5297A4D)

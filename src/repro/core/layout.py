@@ -1,0 +1,129 @@
+"""Bucket slab layout for the sharded DHT.
+
+Struct-of-arrays layout (TPU-friendly: each field is a dense, uniformly
+typed array that shards and DMAs cleanly):
+
+  keys : (S, B, KW) uint32    key words        (POET: 80 B  -> KW = 20)
+  vals : (S, B, VW) uint32    value words      (POET: 104 B -> VW = 26)
+  meta : (S, B)     uint32    bit0 OCCUPIED, bit1 INVALID, bits8+ generation
+  csum : (S, B)     uint32    lock-free checksum over key||value
+
+The paper stores one meta byte per bucket (coarse/lock-free) or an 8-byte
+lock word (fine).  We always carry a uint32 meta word + uint32 checksum:
+8 B/bucket overhead, between the paper's 1 B (coarse) and 15 B (fine).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+OCCUPIED = 1
+INVALID = 2
+GEN_SHIFT = 8
+
+MODE_LOCKFREE = "lockfree"
+MODE_FINE = "fine"
+MODE_COARSE = "coarse"
+MODES = (MODE_LOCKFREE, MODE_FINE, MODE_COARSE)
+
+
+@dataclasses.dataclass(frozen=True)
+class DHTConfig:
+    """Static configuration (pytree aux data)."""
+
+    key_words: int = 20          # 80-byte keys (paper / POET)
+    val_words: int = 26          # 104-byte values
+    n_shards: int = 1            # S — one shard per participating device
+    buckets_per_shard: int = 1024  # B
+    n_probe: int = 6             # candidate set size (paper: 6 byte-windows)
+    mode: str = MODE_LOCKFREE
+    capacity: int = 0            # routing capacity per (src, dst); 0 = auto
+    max_read_retries: int = 2    # lock-free: re-get attempts before invalidating
+
+    def __post_init__(self):
+        assert self.mode in MODES, self.mode
+        assert self.n_probe >= 1
+        assert self.buckets_per_shard >= self.n_probe
+
+    @property
+    def bucket_bytes(self) -> int:
+        return 4 * (self.key_words + self.val_words + 2)
+
+    @property
+    def shard_bytes(self) -> int:
+        return self.bucket_bytes * self.buckets_per_shard
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class DHTState:
+    """The table itself. Leading dim S shards across all devices."""
+
+    cfg: DHTConfig
+    keys: jnp.ndarray
+    vals: jnp.ndarray
+    meta: jnp.ndarray
+    csum: jnp.ndarray
+
+    def tree_flatten(self):
+        return (self.keys, self.vals, self.meta, self.csum), self.cfg
+
+    @classmethod
+    def tree_unflatten(cls, cfg, children):
+        return cls(cfg, *children)
+
+
+def dht_create(cfg: DHTConfig) -> DHTState:
+    """DHT_create: allocate the empty table (paper §3.1 API)."""
+    s, b = cfg.n_shards, cfg.buckets_per_shard
+    return DHTState(
+        cfg=cfg,
+        keys=jnp.zeros((s, b, cfg.key_words), jnp.uint32),
+        vals=jnp.zeros((s, b, cfg.val_words), jnp.uint32),
+        meta=jnp.zeros((s, b), jnp.uint32),
+        csum=jnp.zeros((s, b), jnp.uint32),
+    )
+
+
+def dht_free(state: DHTState) -> None:
+    """DHT_free: API parity with the paper; JAX arrays are GC-managed."""
+    del state
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def occupancy(state: DHTState, cfg: DHTConfig | None = None) -> jnp.ndarray:
+    """Fraction of occupied (and valid) buckets, per shard."""
+    m = state.meta
+    occ = ((m & OCCUPIED) != 0) & ((m & INVALID) == 0)
+    return occ.mean(axis=-1)
+
+
+def pack_floats(x: jnp.ndarray, n_words: int) -> jnp.ndarray:
+    """Bitcast (..., k) float32 into (..., n_words) uint32, zero padded.
+
+    POET keys are 10 doubles = 80 B.  TPUs are f32-native, so the chemistry
+    runs in f32; we keep the paper's 80-byte key layout by padding each f32
+    to a 2-word slot (value word + zero word)."""
+    u = jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.uint32)
+    k = u.shape[-1]
+    out = jnp.zeros(x.shape[:-1] + (n_words,), jnp.uint32)
+    take = min(n_words, 2 * k)
+    # interleave value words into even slots (paper-sized layout)
+    idx = jnp.arange(0, take, 2)
+    out = out.at[..., idx].set(u[..., : idx.shape[0]])
+    return out
+
+
+def unpack_floats(w: jnp.ndarray, n_floats: int) -> jnp.ndarray:
+    """Inverse of :func:`pack_floats`."""
+    idx = jnp.arange(0, 2 * n_floats, 2)
+    u = w[..., idx]
+    return jax.lax.bitcast_convert_type(u, jnp.float32)
+
+
+def tree_bytes(tree: Any) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree_util.tree_leaves(tree))

@@ -1,0 +1,81 @@
+"""Server-based key-value baseline (DAOS stand-in, paper §3.2/Fig. 3).
+
+The paper compares the fully distributed MPI-DHT against DAOS, a
+client-server object store: every operation is an RPC to *one* server,
+whose service capacity — not the client count — bounds throughput, so the
+measured curves go flat.
+
+We model that architecture faithfully inside the same harness: all queries
+route to shard 0 (the "server node"), and the server drains its request
+queue ``server_width`` ops per round (its core count), one round per RPC
+generation.  The distributed DHT in ``core/dht.py`` instead spreads the
+same traffic over every shard in a single round — the architectural
+contrast of Fig. 1.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import dht as dht_ops
+from .hashing import base_bucket, hash64
+from .layout import DHTConfig, DHTState, dht_create
+
+
+def server_create(cfg: DHTConfig) -> DHTState:
+    # one storage target: the server owns all buckets
+    server_cfg = DHTConfig(
+        key_words=cfg.key_words,
+        val_words=cfg.val_words,
+        n_shards=1,
+        buckets_per_shard=cfg.n_shards * cfg.buckets_per_shard,
+        n_probe=cfg.n_probe,
+        mode="coarse",  # server serializes; consistency by construction
+        capacity=0,
+        max_read_retries=cfg.max_read_retries,
+    )
+    return dht_create(server_cfg)
+
+
+def _server_rounds(n_ops: int, server_width: int) -> int:
+    return -(-n_ops // max(server_width, 1))
+
+
+def server_write(state: DHTState, keys, vals, server_width: int = 24):
+    """All clients RPC the server; it applies ``server_width`` ops/round."""
+    cfg = state.cfg
+    n = keys.shape[0]
+    rounds = _server_rounds(n, server_width)
+    h_hi, h_lo = hash64(keys)
+    base = base_bucket(h_lo, cfg.buckets_per_shard, cfg.n_probe)
+    slab = {"keys": state.keys[0], "vals": state.vals[0],
+            "meta": state.meta[0], "csum": state.csum[0]}
+    iota = jnp.arange(n, dtype=jnp.int32)
+
+    def body(r, slab_c):
+        mask = (iota >= r * server_width) & (iota < (r + 1) * server_width)
+        slab_n, _code, _passes = dht_ops._apply_writes(cfg, slab_c, base, keys, vals, mask)
+        return slab_n
+
+    slab = jax.lax.fori_loop(0, rounds, body, slab)
+    new = DHTState(
+        cfg,
+        slab["keys"][None], slab["vals"][None],
+        slab["meta"][None], slab["csum"][None],
+    )
+    return new, {"rounds": jnp.int32(rounds)}
+
+
+def server_read(state: DHTState, keys, server_width: int = 24):
+    cfg = state.cfg
+    n = keys.shape[0]
+    rounds = _server_rounds(n, server_width)
+    h_hi, h_lo = hash64(keys)
+    base = base_bucket(h_lo, cfg.buckets_per_shard, cfg.n_probe)
+    slab = {"keys": state.keys[0], "vals": state.vals[0],
+            "meta": state.meta[0], "csum": state.csum[0]}
+    # reads do not mutate; the server still only serves server_width per round
+    slab2, val, found, _mm = dht_ops._apply_reads(
+        cfg, slab, base, keys, jnp.ones((n,), bool)
+    )
+    return state, val, found, {"rounds": jnp.int32(rounds)}

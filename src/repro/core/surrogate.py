@@ -1,0 +1,95 @@
+"""Surrogate-model cache on top of the DHT (paper §5.4).
+
+POET's pattern: round the expensive-simulation inputs to a user-chosen
+number of significant digits, use the rounded vector as the DHT key, and
+store the *exact* simulation output as the value.  A later query whose
+rounded inputs coincide skips the expensive computation entirely —
+trading modeling accuracy for speed via the rounding knob.
+
+`lookup_or_compute` is the whole integration surface an application needs
+(POET example: `examples/poet_reactive_transport.py`).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from . import dht as dht_ops
+from .layout import DHTConfig, DHTState, dht_create, pack_floats, unpack_floats
+
+
+def round_significant(x: jnp.ndarray, sig_digits: int) -> jnp.ndarray:
+    """Round to ``sig_digits`` significant (decimal) digits, elementwise.
+
+    The reference implementation for ``kernels/round_kernel.py``."""
+    x = x.astype(jnp.float32)
+    absx = jnp.abs(x)
+    safe = jnp.where(absx > 0, absx, 1.0)
+    exp = jnp.floor(jnp.log10(safe))
+    scale = jnp.power(10.0, (sig_digits - 1) - exp)
+    out = jnp.round(x * scale) / scale
+    return jnp.where(absx > 0, out, 0.0).astype(jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class SurrogateConfig:
+    n_inputs: int = 10        # POET: 9 species + time step
+    n_outputs: int = 13       # POET: 13 result doubles
+    sig_digits: int = 4       # key rounding (accuracy/hit-rate tradeoff)
+    dht: DHTConfig = dataclasses.field(default_factory=DHTConfig)
+
+    def __post_init__(self):
+        assert self.dht.key_words >= 2 * self.n_inputs
+        assert self.dht.val_words >= 2 * self.n_outputs
+
+
+def surrogate_create(cfg: SurrogateConfig) -> DHTState:
+    return dht_create(cfg.dht)
+
+
+def make_keys(cfg: SurrogateConfig, inputs: jnp.ndarray) -> jnp.ndarray:
+    """(n, n_inputs) float -> (n, KW) uint32 rounded keys (80 B for POET)."""
+    rounded = round_significant(inputs, cfg.sig_digits)
+    return pack_floats(rounded, cfg.dht.key_words)
+
+
+def lookup(cfg: SurrogateConfig, state: DHTState, inputs: jnp.ndarray, *, axis_name=None):
+    """Query the cache. Returns (state', outputs, found, stats)."""
+    keys = make_keys(cfg, inputs)
+    state, val_words, found, stats = dht_ops.dht_read(state, keys, axis_name=axis_name)
+    outputs = unpack_floats(val_words, cfg.n_outputs)
+    return state, outputs, found, stats
+
+
+def store(cfg: SurrogateConfig, state: DHTState, inputs: jnp.ndarray,
+          outputs: jnp.ndarray, valid=None, *, axis_name=None):
+    keys = make_keys(cfg, inputs)
+    vals = pack_floats(outputs, cfg.dht.val_words)
+    return dht_ops.dht_write(state, keys, vals, valid, axis_name=axis_name)
+
+
+def lookup_or_compute(
+    cfg: SurrogateConfig,
+    state: DHTState,
+    inputs: jnp.ndarray,
+    compute_fn,
+    *,
+    axis_name=None,
+):
+    """The surrogate pattern: DHT hit -> reuse; miss -> compute + publish.
+
+    ``compute_fn(inputs) -> outputs`` is the expensive simulation.  In JAX's
+    batched execution the misses are computed for all rows and selected by
+    mask; the *work saved* is therefore accounted by the returned hit stats
+    (and realized wall-clock in the round-trip-driven host loop of the POET
+    example, which skips the solver entirely on full-hit tiles).
+    """
+    state, cached, found, rstats = lookup(cfg, state, inputs, axis_name=axis_name)
+    computed = compute_fn(inputs)
+    outputs = jnp.where(found[:, None], cached, computed)
+    state, wstats = store(cfg, state, inputs, computed, valid=~found, axis_name=axis_name)
+    stats = {"hits": rstats["hits"], "misses": rstats["misses"],
+             "mismatches": rstats["mismatches"], "stored": wstats["inserted"]}
+    return state, outputs, found, stats

@@ -1,0 +1,1 @@
+from .pipeline import DataConfig, ShardInfo, get_batch, reassign_straggler  # noqa: F401

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the DHT hot paths + pure-jnp oracles (ref.py).
+
+The paper's hot loops are exactly these: key hashing, bucket probing and
+checksum validation dominate every DHT_read/DHT_write (paper §3.5 measures
+them against the synchronization overhead).  Kernels target TPU
+(pl.pallas_call + explicit BlockSpec VMEM tiling) and are validated in
+interpret mode on CPU against the oracles.
+"""
+
+from . import ops, ref  # noqa: F401

@@ -1,0 +1,56 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (this container is CPU-only; the
+kernels' BlockSpec tiling targets TPU VMEM) and False on real TPU.
+"""
+from __future__ import annotations
+
+import jax
+
+from .checksum_kernel import checksum_pallas
+from .hash_kernel import hash64_pallas
+from .probe_kernel import probe_pallas
+from .round_kernel import round_sig_pallas
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def hash64(keys, *, interpret: bool | None = None):
+    return hash64_pallas(
+        keys, interpret=_default_interpret() if interpret is None else interpret
+    )
+
+
+def checksum(keys, vals, *, interpret: bool | None = None):
+    return checksum_pallas(
+        keys, vals,
+        interpret=_default_interpret() if interpret is None else interpret,
+    )
+
+
+def probe(slab_keys, slab_vals, slab_meta, slab_csum, qkeys, base,
+          *, n_probe=6, validate_checksum=True, interpret: bool | None = None):
+    return probe_pallas(
+        slab_keys, slab_vals, slab_meta, slab_csum, qkeys, base,
+        n_probe=n_probe, validate_checksum=validate_checksum,
+        interpret=_default_interpret() if interpret is None else interpret,
+    )
+
+
+def round_sig(x, sig_digits, *, interpret: bool | None = None):
+    return round_sig_pallas(
+        x, sig_digits,
+        interpret=_default_interpret() if interpret is None else interpret,
+    )
+
+
+def local_attention(q, k, v, *, window, causal=True, bq=128, bk=128,
+                    interpret: bool | None = None):
+    from .local_attn_kernel import local_attention_pallas
+
+    return local_attention_pallas(
+        q, k, v, window=window, causal=causal, bq=bq, bk=bk,
+        interpret=_default_interpret() if interpret is None else interpret,
+    )

@@ -1,0 +1,108 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each ``ref_*`` is the ground truth the kernels are allclose-tested against
+(tests/test_kernels.py sweeps shapes and dtypes).  The DHT oracles reuse
+the exact functions the production JAX path uses, so kernel == oracle ==
+system semantics.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hashing import (
+    byte_window_indices,
+    checksum32,
+    hash64,
+    murmur32_words,
+    probe_indices,
+)
+from repro.core.layout import INVALID, OCCUPIED
+from repro.core.surrogate import round_significant
+
+
+def ref_hash64(keys: jnp.ndarray) -> jnp.ndarray:
+    """(N, KW) uint32 -> (N, 2) uint32 [hi, lo]."""
+    hi, lo = hash64(keys)
+    return jnp.stack([hi, lo], axis=-1)
+
+
+def ref_checksum(keys: jnp.ndarray, vals: jnp.ndarray) -> jnp.ndarray:
+    """(N, KW), (N, VW) -> (N,) uint32."""
+    return checksum32(keys, vals)
+
+
+def ref_round_sig(x: jnp.ndarray, sig_digits: int) -> jnp.ndarray:
+    return round_significant(x, sig_digits)
+
+
+def ref_probe(
+    slab_keys: jnp.ndarray,   # (B, KW) uint32
+    slab_vals: jnp.ndarray,   # (B, VW) uint32
+    slab_meta: jnp.ndarray,   # (B,) uint32
+    slab_csum: jnp.ndarray,   # (B,) uint32
+    qkeys: jnp.ndarray,       # (C, KW) uint32
+    base: jnp.ndarray,        # (C,) int32 window starts
+    n_probe: int,
+    validate_checksum: bool = True,
+):
+    """DHT read probe: first candidate whose bucket is occupied, valid and
+    key-equal wins; lock-free mode additionally validates the checksum.
+
+    Returns (vals (C, VW), found (C,), slot (C,) absolute index or -1)."""
+    idx = probe_indices(base, n_probe)                       # (C, P)
+    bkeys = slab_keys[idx]                                   # (C, P, KW)
+    bvals = slab_vals[idx]
+    bmeta = slab_meta[idx]
+    bcsum = slab_csum[idx]
+    occupied = (bmeta & OCCUPIED) != 0
+    invalid = (bmeta & INVALID) != 0
+    match = jnp.all(bkeys == qkeys[:, None, :], axis=-1) & occupied & ~invalid
+    has = jnp.any(match, axis=-1)
+    sel = jnp.argmax(match, axis=-1)
+    val = jnp.take_along_axis(bvals, sel[:, None, None], axis=1)[:, 0]
+    if validate_checksum:
+        stored = jnp.take_along_axis(bcsum, sel[:, None], axis=1)[:, 0]
+        ok = checksum32(qkeys, val) == stored
+        has = has & ok
+    slot = jnp.where(has, base + sel.astype(jnp.int32), -1)
+    val = jnp.where(has[:, None], val, jnp.uint32(0))
+    return val, has, slot
+
+
+def ref_byte_window_probe(slab_keys, slab_vals, slab_meta, slab_csum,
+                          qkeys, n_probe, n_buckets):
+    """The paper's original byte-window candidate derivation (Fig. 2),
+    retained for comparison with the contiguous-window TPU adaptation."""
+    hi, lo = hash64(qkeys)
+    idx = byte_window_indices(hi, lo, n_buckets, n_probe)    # (C, P)
+    bkeys = slab_keys[idx]
+    bvals = slab_vals[idx]
+    bmeta = slab_meta[idx]
+    occupied = (bmeta & OCCUPIED) != 0
+    match = jnp.all(bkeys == qkeys[:, None, :], axis=-1) & occupied
+    has = jnp.any(match, axis=-1)
+    sel = jnp.argmax(match, axis=-1)
+    val = jnp.take_along_axis(bvals, sel[:, None, None], axis=1)[:, 0]
+    return jnp.where(has[:, None], val, jnp.uint32(0)), has
+
+
+def ref_murmur32(words: jnp.ndarray, seed: int) -> jnp.ndarray:
+    return murmur32_words(words, seed)
+
+
+def ref_local_attention(q, k, v, *, window: int, causal: bool = True):
+    """(BH, S, D) sliding-window attention oracle for the Pallas kernel."""
+    import math
+
+    bh, s, d = q.shape
+    scores = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(d)
+    qp = jnp.arange(s)[:, None]
+    kp = jnp.arange(s)[None, :]
+    valid = (qp - kp) < window
+    if causal:
+        valid &= kp <= qp
+    scores = jnp.where(valid, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", probs, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,324 @@
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, print memory/cost analysis, and extract the
+roofline terms (EXPERIMENTS.md §Dry-run / §Roofline read the JSON this
+writes).
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch starcoder2-3b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out results/dryrun
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax locks the device count on first init.
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, all_arch_ids, applicable, get_config, input_specs
+from repro.launch.mesh import dp_axes, make_production_mesh, tp_axis
+from repro.launch.shardings import (
+    batch_shardings,
+    cache_shardings,
+    opt_state_shardings,
+    params_shardings,
+)
+from repro.models import init_lm
+from repro.models.act_sharding import set_activation_spec
+from repro.models.config import ModelConfig
+from repro.optim.adamw import AdamWConfig, init_opt_state
+from repro.roofline.analysis import analyze, model_flops_for
+from repro.serving.serve_step import make_serve_step
+from repro.train.train_step import make_train_step
+
+
+def _to_bf16(tree):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(
+            s.shape, jnp.bfloat16 if jnp.issubdtype(s.dtype, jnp.floating) else s.dtype),
+        tree)
+
+
+def _mem_analysis(compiled):
+    try:
+        m = compiled.memory_analysis()
+        if m is None:
+            return {}
+        return {
+            "argument_bytes": int(getattr(m, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(m, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(m, "temp_size_in_bytes", 0)),
+            "generated_code_bytes": int(getattr(m, "generated_code_size_in_bytes", 0)),
+            "alias_bytes": int(getattr(m, "alias_size_in_bytes", 0)),
+        }
+    except Exception as e:  # CPU backend may not implement it
+        return {"unavailable": str(e)}
+
+
+def _shard_bytes(shardings, shapes) -> int:
+    """Per-device bytes of a sharded tree (backup for memory_analysis)."""
+    total = 0
+    for sh, sp in zip(jax.tree.leaves(shardings), jax.tree.leaves(shapes)):
+        n = int(np.prod(sp.shape)) if sp.shape else 1
+        shard = sh.shard_shape(sp.shape) if hasattr(sh, "shard_shape") else sp.shape
+        n_local = int(np.prod(shard)) if shard else 1
+        total += n_local * sp.dtype.itemsize
+        del n
+    return total
+
+
+def build_cell(cfg: ModelConfig, shape_name: str, multi_pod: bool, accum: int = 1,
+               cast_bf16: bool = False, profile: str = "fsdp_tp"):
+    """Returns (jitted_fn, abstract_args, aux_info)."""
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    shape = SHAPES[shape_name]
+    dp = dp_axes(mesh)
+    tp = tp_axis(mesh)
+    set_activation_spec(NamedSharding(mesh, P(dp, tp, None)))
+
+    specs = input_specs(cfg, shape_name)
+    params_shape = jax.eval_shape(lambda: init_lm(cfg, jax.random.PRNGKey(0)))
+
+    if shape.kind == "train":
+        if cast_bf16:
+            # bf16 working params + f32 master in the optimizer state: the
+            # FSDP all-gathers then move bf16 with no convert in the path
+            params_shape = _to_bf16(params_shape)
+        opt_shape = jax.eval_shape(
+            lambda p: init_opt_state(p, master=cast_bf16), params_shape)
+        p_shard = params_shardings(params_shape, mesh)
+        o_shard = opt_state_shardings(opt_shape, p_shard, mesh)
+        b_shard = batch_shardings(specs, mesh)
+        ocfg = AdamWConfig()
+        step = make_train_step(cfg, ocfg, accum=accum, donate=True, jit=False,
+                               grad_shardings=p_shard)
+        fn = jax.jit(
+            step,
+            in_shardings=(p_shard, o_shard, b_shard),
+            out_shardings=(p_shard, o_shard, None),
+            donate_argnums=(0, 1),
+        )
+        args = (params_shape, opt_shape, specs)
+        return fn, args, {"cfg": cfg, "mesh": mesh,
+                          "p_shard": p_shard, "o_shard": o_shard}
+
+    if shape.kind == "prefill":
+        from repro.models import forward
+
+        sparams = _to_bf16(params_shape)
+        p_shard = params_shardings(sparams, mesh)
+        b_shard = batch_shardings(specs, mesh)
+
+        def prefill_fn(params, batch):
+            logits, _ = forward(params, cfg, batch, remat=False)
+            return logits[:, -1].astype(jnp.float32)
+
+        fn = jax.jit(prefill_fn, in_shardings=(p_shard, b_shard))
+        return fn, (sparams, specs), {"cfg": cfg, "mesh": mesh, "p_shard": p_shard}
+
+    # decode
+    sparams = _to_bf16(params_shape)
+    p_shard = params_shardings(sparams, mesh, profile=profile)
+    cache_shape = specs["cache"]
+    c_shard = cache_shardings(cache_shape, mesh, shape.batch,
+                              seq_over_tp=(profile == "tp2d"))
+    if profile == "tp2d":
+        from repro.models.act_sharding import set_decode_spec
+
+        set_decode_spec(NamedSharding(mesh, P(None, None, dp)))
+    tok_shard = batch_shardings({"tokens": specs["tokens"]}, mesh)["tokens"]
+    if shape.batch < len(mesh.devices.reshape(-1)) and shape.batch == 1:
+        tok_shard = NamedSharding(mesh, P(None, None))
+    serve = make_serve_step(cfg)
+    fn = jax.jit(
+        serve,
+        in_shardings=(p_shard, c_shard, tok_shard, NamedSharding(mesh, P())),
+        out_shardings=(None, c_shard),
+        donate_argnums=(1,),
+    )
+    args = (sparams, cache_shape, specs["tokens"], specs["t"])
+    return fn, args, {"cfg": cfg, "mesh": mesh, "p_shard": p_shard}
+
+
+def _compile_once(cfg, shape_name, multi_pod, accum, cast_bf16=False,
+                  profile="fsdp_tp"):
+    fn, args, aux = build_cell(cfg, shape_name, multi_pod, accum,
+                               cast_bf16=cast_bf16, profile=profile)
+    mesh = aux["mesh"]
+    with mesh:
+        lowered = fn.lower(*args)
+        compiled = lowered.compile()
+    return compiled, mesh
+
+
+def _cost_of(compiled) -> tuple[dict, dict, dict]:
+    from repro.roofline.analysis import collective_bytes
+
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    ca = {k: float(v) for k, v in ca.items() if isinstance(v, (int, float))}
+    coll = collective_bytes(compiled.as_text())
+    counts = coll.pop("_counts", {})
+    counts["_raw_f32_upcast_bytes"] = coll.pop("_raw_f32_upcast_bytes", 0)
+    return ca, coll, counts
+
+
+def probe_cfg(cfg: ModelConfig, n_periods: int) -> ModelConfig:
+    import dataclasses
+
+    from repro.models.stack import find_period
+
+    p, _, _ = find_period(cfg.block_pattern)
+    n = p * n_periods
+    return dataclasses.replace(cfg, n_layers=n, block_pattern=cfg.block_pattern[:n])
+
+
+def extrapolated_costs(cfg, shape_name, multi_pod, accum,
+                       cast_bf16=False, profile="fsdp_tp"):
+    """XLA's HloCostAnalysis counts while/scan bodies ONCE, ignoring trip
+    count.  We therefore compile 1-period and 2-period *unrolled* probes of
+    the same architecture and extrapolate linearly over the layer periods:
+
+        total(metric) = probe1 + (n_full - 1 + tail/p) * (probe2 - probe1)
+
+    exact for homogeneous periods (which these stacks are by construction)."""
+    from repro.models.stack import find_period
+
+    p, n_full, tail = find_period(cfg.block_pattern)
+    c1, _ = _compile_once(probe_cfg(cfg, 1), shape_name, multi_pod, accum,
+                          cast_bf16, profile)
+    ca1, coll1, cnt1 = _cost_of(c1)
+    c2, _ = _compile_once(probe_cfg(cfg, 2), shape_name, multi_pod, accum,
+                          cast_bf16, profile)
+    ca2, coll2, cnt2 = _cost_of(c2)
+    scale = (n_full - 1) + tail / p
+
+    def ext(d1, d2):
+        out = {}
+        for k in set(d1) | set(d2):
+            a, b = d1.get(k, 0.0), d2.get(k, 0.0)
+            out[k] = a + scale * max(b - a, 0.0)
+        return out
+
+    return ext(ca1, ca2), ext(coll1, coll2), ext(cnt1, cnt2), {
+        "probe1": {"cost": ca1, "coll": coll1},
+        "probe2": {"cost": ca2, "coll": coll2},
+    }
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             accum: int = 1, verbose: bool = True,
+             cast_bf16: bool = False, profile: str = "fsdp_tp",
+             capacity_factor: float | None = None) -> dict:
+    shape = SHAPES[shape_name]
+    cfg = get_config(arch)
+    if capacity_factor is not None:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, expert_capacity_factor=capacity_factor)
+        cell_cf = capacity_factor
+    else:
+        cell_cf = cfg.expert_capacity_factor
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    cell = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+            "accum": accum, "cast_bf16": cast_bf16, "profile": profile,
+            "capacity_factor": cell_cf,
+            "ok": False}
+    runs, why = applicable(cfg, shape_name)
+    if not runs:
+        cell.update({"skipped": True, "reason": why})
+        return cell
+    t0 = time.perf_counter()
+    try:
+        compiled, mesh = _compile_once(cfg, shape_name, multi_pod, accum,
+                                       cast_bf16, profile)
+        t_compile = time.perf_counter() - t0
+        mem = _mem_analysis(compiled)
+        if verbose:
+            print(f"[{arch} x {shape_name} x {mesh_name}] memory_analysis:",
+                  json.dumps(mem), flush=True)
+        chips = int(mesh.devices.size)
+        mf = model_flops_for(cfg, shape.kind, shape.seq, shape.batch)
+        ca_raw, coll_raw, _ = _cost_of(compiled)
+        ca_est, coll_est, cnt_est, probes = extrapolated_costs(
+            cfg, shape_name, multi_pod, accum, cast_bf16, profile)
+        if verbose:
+            print(f"[{arch} x {shape_name} x {mesh_name}] cost_analysis "
+                  f"(per device, loop-corrected): flops={ca_est.get('flops', 0):.3e} "
+                  f"bytes={ca_est.get('bytes accessed', 0):.3e}", flush=True)
+        cell.update({
+            "ok": True,
+            "chips": chips,
+            "compile_s": round(t_compile, 1),
+            "memory": mem,
+            "cost_per_device": ca_est,
+            "cost_per_device_raw_scanned": ca_raw,
+            "collective_bytes_per_device": coll_est,
+            "collective_counts": cnt_est,
+            "probes": probes,
+            "model_flops": mf,
+            "active_params": cfg.active_param_count(),
+            "total_params": cfg.param_count(),
+        })
+    except Exception as e:
+        cell.update({"error": f"{type(e).__name__}: {e}",
+                     "traceback": traceback.format_exc()[-2000:]})
+        if verbose:
+            print(f"[{arch} x {shape_name} x {mesh_name}] FAILED: {e}", flush=True)
+    finally:
+        set_activation_spec(None)
+        from repro.models.act_sharding import set_decode_spec
+        set_decode_spec(None)
+    return cell
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--cast-bf16", action="store_true")
+    ap.add_argument("--capacity-factor", type=float, default=None,
+                    help="override MoE expert_capacity_factor")
+    ap.add_argument("--profile", default="fsdp_tp",
+                    choices=("fsdp_tp", "tp2d"))
+    ap.add_argument("--suffix", default="",
+                    help="output filename suffix for perf variants")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    archs = all_arch_ids() if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = [False, True] if (args.both_meshes or args.all) else [args.multi_pod]
+
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                name = (f"{arch}__{shape}__{'mp' if mp else 'sp'}"
+                        f"{args.suffix}.json")
+                path = os.path.join(args.out, name)
+                if os.path.exists(path):
+                    print(f"skip existing {name}", flush=True)
+                    continue
+                cell = run_cell(arch, shape, mp, accum=args.accum,
+                                cast_bf16=args.cast_bf16,
+                                profile=args.profile,
+                                capacity_factor=args.capacity_factor)
+                with open(path, "w") as f:
+                    json.dump(cell, f, indent=1)
+                status = ("SKIP" if cell.get("skipped")
+                          else "OK" if cell["ok"] else "FAIL")
+                print(f"=== {name}: {status}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,219 @@
+"""Path-based sharding rules: parameter / optimizer / batch / cache specs.
+
+Baseline layout (EXPERIMENTS.md §Perf iterates on this):
+  - TP over `model`: attention heads, MLP hidden, experts (EP), vocab
+  - FSDP over (`pod`,`data`): the non-TP major dim of every weight;
+    optimizer moments shard identically (ZeRO-3)
+  - DP over (`pod`,`data`): the batch dim of activations
+  - decode caches: batch over DP when batch >= |DP|, else sequence over DP;
+    KV heads over TP
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .mesh import dp_axes, tp_axis
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def _axes_size(mesh, entry) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    axes = entry if isinstance(entry, tuple) else (entry,)
+    n = 1
+    for a in axes:
+        n *= sizes[a]
+    return n
+
+
+def fix_spec(spec: P, shape: tuple[int, ...], mesh) -> P:
+    """Make a candidate spec valid for an *input* sharding: jit requires
+    every sharded dim to divide evenly.  An axis that does not divide its
+    dim shifts right to the next free divisible dim (e.g. KV heads 8 on a
+    16-way TP axis -> shard head_dim 128 instead); otherwise it drops."""
+    n = len(shape)
+    entries = list(spec) + [None] * (n - len(spec))
+    out: list = [None] * n
+    reserved = {i for i, e in enumerate(entries) if e is not None}
+    for i, e in enumerate(entries):
+        if e is None:
+            continue
+        size = _axes_size(mesh, e)
+        placed = False
+        for j in range(i, n):
+            if out[j] is not None:
+                continue
+            if j != i and j in reserved:
+                continue
+            if shape[j] % size == 0 and shape[j] >= size:
+                out[j] = e
+                placed = True
+                break
+        del placed
+    return P(*out)
+
+
+def param_spec(path: str, shape: tuple[int, ...], fsdp, tp,
+               profile: str = "fsdp_tp") -> P:
+    """Logical spec for one parameter (before scan-stack adjustment).
+
+    profiles:
+      fsdp_tp — baseline: weights stored sharded over (pod,data), gathered
+                at use; TP over model.  Right for training (weights move
+                once per traversal, amortized over the whole batch).
+      tp2d    — decode: weights *stay* sharded over BOTH axis groups and
+                matmuls run as distributed GEMMs (partial sums reduced via
+                activation-sized psums).  Kills the per-token weight
+                all-gather that dominates decode (§Perf iteration D1)."""
+    parts = path.split("/")
+    leaf = parts[-1]
+    parent = parts[-2] if len(parts) > 1 else ""
+
+    if profile == "tp2d":
+        if leaf == "table":                   # (V, E)
+            return P(tp, fsdp)
+        if parent in ("wq", "wk", "wv"):
+            if leaf == "w":                   # (E, H, D): contract-dim 2D
+                return P(fsdp, tp, None)
+            return P(tp, None)
+        if parent == "wo" and "attn" in path:
+            return P(tp, fsdp)                # (H*D, E)
+        if "moe" in path and parent in ("wi", "wg"):
+            return P(tp, fsdp, None)          # (X, E, F)
+        if "moe" in path and parent == "wo":
+            return P(tp, fsdp, None)          # (X, F, E)
+        if parent in ("wi", "wg", "in_proj", "gate_in", "sig_in"):
+            return P(fsdp, tp)                # (E, F) contract over E
+        if parent in ("wo", "out_proj", "out"):
+            return P(tp, fsdp)                # (F, E)
+        if parent in ("wa", "wx"):
+            return P(fsdp, tp)
+        if parent == "conv":
+            return P(None, tp)
+        return P(*([None] * len(shape)))
+
+    if leaf == "table":                       # (V, E)
+        return P(tp, fsdp)
+    if parent in ("wq", "wk", "wv"):
+        if leaf == "w":                       # (E, H, D)
+            return P(fsdp, tp, None)
+        return P(tp, None)                    # bias (H, D)
+    if parent == "wo" and len(shape) == 2 and "attn" in path:
+        return P(tp, fsdp)                    # (H*D, E)
+    if parent == "router":
+        return P(fsdp, None)                  # (E, X)
+    if "moe" in path and parent in ("wi", "wg"):
+        return P(tp, fsdp, None)              # (X, E, F) — EP on experts
+    if "moe" in path and parent == "wo":
+        return P(tp, None, fsdp)              # (X, F, E)
+    if parent in ("wi", "wg"):
+        return P(fsdp, tp)                    # (E, F)
+    if parent == "wo":
+        return P(tp, fsdp)                    # (F, E)
+    if parent == "in_proj":                   # ssd (E, F)
+        return P(fsdp, tp)
+    if parent == "out_proj":                  # ssd (di, E)
+        return P(tp, fsdp)
+    if parent in ("gate_in", "sig_in"):       # rglru (E, W)
+        return P(fsdp, tp)
+    if parent in ("wa", "wx"):                # rglru (W, W)
+        return P(None, tp)
+    if parent == "out" and len(shape) == 2:   # rglru (W, E)
+        return P(tp, fsdp)
+    if parent == "conv":                      # (W, C) depthwise
+        return P(None, tp)
+    # norms, scalars, gates: replicate
+    return P(*([None] * len(shape)))
+
+
+def params_shardings(params_shape: Any, mesh, profile: str = "fsdp_tp") -> Any:
+    """ShapeDtypeStruct tree (or concrete tree) -> NamedSharding tree."""
+    fsdp = dp_axes(mesh)
+    tp = tp_axis(mesh)
+
+    def rule(path, leaf):
+        p = _path_str(path)
+        shape = leaf.shape
+        if "scan" in p.split("/"):
+            inner = param_spec(p, shape[1:], fsdp, tp, profile)
+            spec = P(None, *inner)
+        else:
+            spec = param_spec(p, shape, fsdp, tp, profile)
+        return NamedSharding(mesh, fix_spec(spec, shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(rule, params_shape)
+
+
+def opt_state_shardings(opt_shape: Any, params_shardings_tree: Any, mesh) -> Any:
+    """Moments shard like their parameters; step is replicated."""
+    def rule(path, leaf):
+        p = _path_str(path)
+        if p == "step":
+            return NamedSharding(mesh, P())
+        # strip leading "mu/" or "nu/"
+        sub = p.split("/", 1)[1]
+        ref = params_shardings_tree
+        for k in sub.split("/"):
+            if isinstance(ref, (list, tuple)):
+                ref = ref[int(k)]
+            else:
+                ref = ref[k]
+        return ref
+
+    return jax.tree_util.tree_map_with_path(rule, opt_shape)
+
+
+def batch_shardings(batch_shape: Any, mesh) -> Any:
+    dp = dp_axes(mesh)
+
+    def rule(path, leaf):
+        spec = P(*([dp] + [None] * (len(leaf.shape) - 1)))
+        return NamedSharding(mesh, fix_spec(spec, leaf.shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(rule, batch_shape)
+
+
+def cache_shardings(cache_shape: Any, mesh, batch: int,
+                    seq_over_tp: bool = False) -> Any:
+    """Decode caches.  KV: (L, B, len, Hk, D); ssd h: (L, B, nh, hd, st);
+    conv: (L, B, W, C); slot_pos: (L, len).
+
+    seq_over_tp: shard the context length over the TP axis (each chip holds
+    a slice of the KV history; attention reduces via tiny psums) instead of
+    sharding heads/head-dim — avoids re-gathering the cache every token."""
+    dp = dp_axes(mesh)
+    tp = tp_axis(mesh)
+    dp_size = int(np.prod([dict(zip(mesh.axis_names, mesh.devices.shape))[a]
+                           for a in dp])) if dp else 1
+    batch_ok = batch >= dp_size and batch % dp_size == 0
+
+    def rule(path, leaf):
+        p = _path_str(path)
+        leafname = p.split("/")[-1]
+        nd = len(leaf.shape)
+        if leafname == "slot_pos":
+            spec = P(*([None] * nd))
+        elif leafname in ("k", "v") and nd == 5:
+            if seq_over_tp:
+                spec = (P(None, dp, tp, None, None) if batch_ok
+                        else P(None, None, (*(dp or ()), tp), None, None))
+            else:
+                spec = (P(None, dp, None, tp, None) if batch_ok
+                        else P(None, None, dp, tp, None))
+        elif leafname == "h" and nd == 5:      # stacked ssd state
+            spec = P(None, dp if batch_ok else None, tp, None, None)
+        elif leafname == "h" and nd == 3:      # stacked rglru state (L,B,W)
+            spec = P(None, dp if batch_ok else None, tp)
+        elif leafname == "conv" and nd == 4:
+            spec = P(None, dp if batch_ok else None, None, tp)
+        else:
+            spec = P(*([None] * nd))
+        return NamedSharding(mesh, fix_spec(spec, leaf.shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(rule, cache_shape)

@@ -1,0 +1,52 @@
+"""Training launcher: ``--arch <id>`` + mesh + fault-tolerant loop.
+
+On this CPU container it runs reduced configs; on a real TPU slice the
+same entry point runs the full configs with the production mesh sharding
+(launch/shardings.py) — the dry-run (launch/dryrun.py) proves those
+programs compile for every assigned cell.
+
+    PYTHONPATH=src python -m repro.launch.train --arch starcoder2-3b \
+        --reduced --steps 50
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import all_arch_ids, get_config, reduced
+from repro.data import DataConfig
+from repro.optim import AdamWConfig
+from repro.train import TrainerConfig, run
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=all_arch_ids())
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced same-family config (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--compression", default="none",
+                    choices=("none", "int8", "topk"))
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                      global_batch=args.batch)
+    ocfg = AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+                       total_steps=args.steps, compression=args.compression)
+    tcfg = TrainerConfig(total_steps=args.steps, accum=args.accum,
+                         checkpoint_every=max(args.steps // 3, 1),
+                         checkpoint_dir=args.ckpt_dir, log_every=10)
+    run(cfg, dcfg, ocfg, tcfg)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+from .config import ATTN, ATTN_LOCAL, MOE, RGLRU, SSD, ModelConfig  # noqa: F401
+from .model import (  # noqa: F401
+    decode_step,
+    forward,
+    greedy_sample,
+    init_cache,
+    init_lm,
+    loss_fn,
+    param_count,
+    prefill,
+)

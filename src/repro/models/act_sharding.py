@@ -1,0 +1,47 @@
+"""Activation-sharding hints (sequence parallelism for the residual stream).
+
+The launcher installs a NamedSharding for the (B, S, E) residual stream;
+``stack_forward`` applies it at every scan boundary so remat-saved layer
+inputs stay sharded (batch over DP, sequence over TP) — without this the
+saved activations of the 405B config exceed per-chip HBM (DESIGN.md §7).
+Model code stays mesh-agnostic: with no spec installed this is a no-op.
+"""
+from __future__ import annotations
+
+import jax
+
+_ACT_SHARDING = None
+_DECODE_SHARDING = None
+
+
+def set_activation_spec(sharding) -> None:
+    """sharding: a jax.sharding.NamedSharding over (B, S, E), or None."""
+    global _ACT_SHARDING
+    _ACT_SHARDING = sharding
+
+
+def set_decode_spec(sharding) -> None:
+    """Decode-path residual sharding (B, 1, E).  Sharding E over the FSDP
+    axes makes every weight matmul a local partial dot + activation-sized
+    psum instead of a weight all-gather — the right trade at batch<=128
+    tokens (§Perf iteration D1)."""
+    global _DECODE_SHARDING
+    _DECODE_SHARDING = sharding
+
+
+def hint_residual(x):
+    if _ACT_SHARDING is None or x.ndim != 3:
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, _ACT_SHARDING)
+    except Exception:
+        return x
+
+
+def hint_decode(x):
+    if _DECODE_SHARDING is None or x.ndim != 3:
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, _DECODE_SHARDING)
+    except Exception:
+        return x

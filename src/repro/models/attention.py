@@ -1,0 +1,157 @@
+"""Grouped-query attention with RoPE, local windows, QK-norm, bias, and a
+ring-buffer KV cache for decode (local layers cache only their window)."""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import _init_dense, apply_rope, init_norm, norm
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg, kind: str):
+    e, h, hk, d = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": {"w": _init_dense(ks[0], e, (h, d))},
+        "wk": {"w": _init_dense(ks[1], e, (hk, d))},
+        "wv": {"w": _init_dense(ks[2], e, (hk, d))},
+        "wo": {"w": _init_dense(ks[3], h * d, (e,), scale=1.0 / math.sqrt(h * d))},
+    }
+    if cfg.qkv_bias:
+        p["wq"]["b"] = jnp.zeros((h, d), jnp.float32)
+        p["wk"]["b"] = jnp.zeros((hk, d), jnp.float32)
+        p["wv"]["b"] = jnp.zeros((hk, d), jnp.float32)
+    if cfg.qk_norm:
+        p["q_norm"] = init_norm(ks[4], d)
+        p["k_norm"] = init_norm(ks[5], d)
+    return p
+
+
+def _proj(p, x, bias):
+    w = p["w"].astype(x.dtype)
+    y = jnp.einsum("bse,ehd->bshd", x, w)
+    if bias and "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def _theta(cfg, kind):
+    if kind == "attn_local" and cfg.rope_theta_local is not None:
+        return cfg.rope_theta_local
+    return cfg.rope_theta
+
+
+def _scores_mask(q_pos, k_pos, *, causal: bool, window: Optional[int]):
+    """(…, S_q, S_k) additive mask from absolute positions."""
+    valid = k_pos[..., None, :] >= 0
+    if causal:
+        valid &= k_pos[..., None, :] <= q_pos[..., :, None]
+    if window is not None:
+        valid &= (q_pos[..., :, None] - k_pos[..., None, :]) < window
+    return jnp.where(valid, 0.0, NEG_INF)
+
+
+def _attend(cfg, q, k, v, mask):
+    """q: (B,S,H,D); k,v: (B,L,Hk,D); mask: (B or 1, S, L)."""
+    b, s, h, d = q.shape
+    hk = k.shape[2]
+    g = h // hk
+    q5 = q.reshape(b, s, hk, g, d)
+    scores = jnp.einsum("bskgd,blkd->bkgsl", q5, k) / math.sqrt(d)
+    scores = scores.astype(jnp.float32)
+    if cfg.logit_softcap:
+        c = cfg.logit_softcap
+        scores = jnp.tanh(scores / c) * c
+    scores = scores + mask[:, None, None, :, :]
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgsl,blkd->bskgd", probs, v)
+    return out.reshape(b, s, h * d)
+
+
+DIRECT_ATTN_MAX_SEQ = 2048  # above this, use the chunked flash path
+
+
+def attention(params, cfg, kind, x, positions, *, encoder: bool = False,
+              kv_prefix=None, collect_kv: bool = False):
+    """Full-sequence attention (train / prefill).  positions: (B, S).
+
+    kv_prefix: optional (pk, pv, p_pos) — already-computed KV for a prompt
+    prefix (serving/prefix_cache.py); queries attend over [prefix, self].
+    collect_kv: also return this call's (k, v) for cache publication."""
+    from .flash import chunked_attention
+
+    q = _proj(params["wq"], x, cfg.qkv_bias)
+    k = _proj(params["wk"], x, cfg.qkv_bias)
+    v = _proj(params["wv"], x, cfg.qkv_bias)
+    if cfg.qk_norm:
+        q = norm(params["q_norm"], q)
+        k = norm(params["k_norm"], k)
+    theta = _theta(cfg, kind)
+    q = apply_rope(q, positions, theta)
+    k = apply_rope(k, positions, theta)
+    kv_out = (k, v) if collect_kv else None
+    window = cfg.local_window if kind == "attn_local" else None
+    causal = cfg.causal and not encoder
+    k_all, v_all, k_pos = k, v, positions
+    if kv_prefix is not None:
+        pk, pv, p_pos = kv_prefix
+        k_all = jnp.concatenate([pk.astype(k.dtype), k], axis=1)
+        v_all = jnp.concatenate([pv.astype(v.dtype), v], axis=1)
+        k_pos = jnp.concatenate([p_pos, positions], axis=1)
+    s = x.shape[1]
+    if s > DIRECT_ATTN_MAX_SEQ:
+        out = chunked_attention(
+            q, k_all, v_all, positions, k_pos,
+            causal=causal, window=window, softcap=cfg.logit_softcap,
+        )
+    else:
+        mask = _scores_mask(positions, k_pos, causal=causal, window=window)
+        out = _attend(cfg, q, k_all, v_all, mask)
+    w = params["wo"]["w"].astype(x.dtype)
+    out = out @ w
+    return (out, kv_out) if collect_kv else out
+
+
+# ---------------------------------------------------------------------------
+# KV cache (ring buffer; local layers keep only their window)
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(cfg, kind, batch, max_len, dtype=jnp.bfloat16):
+    length = min(cfg.local_window, max_len) if kind == "attn_local" else max_len
+    hk, d = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, length, hk, d), dtype),
+        "v": jnp.zeros((batch, length, hk, d), dtype),
+        "slot_pos": jnp.full((length,), -1, jnp.int32),
+    }
+
+
+def decode_attention(params, cfg, kind, cache, x, t):
+    """One-token decode.  x: (B, 1, E); t: scalar int32 absolute position.
+    Returns (out (B,1,E), cache')."""
+    q = _proj(params["wq"], x, cfg.qkv_bias)
+    k = _proj(params["wk"], x, cfg.qkv_bias)
+    v = _proj(params["wv"], x, cfg.qkv_bias)
+    if cfg.qk_norm:
+        q = norm(params["q_norm"], q)
+        k = norm(params["k_norm"], k)
+    theta = _theta(cfg, kind)
+    pos = jnp.full((x.shape[0], 1), t, jnp.int32)
+    q = apply_rope(q, pos, theta)
+    k = apply_rope(k, pos, theta)
+
+    length = cache["k"].shape[1]
+    idx = jnp.mod(t, length)
+    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, idx, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, idx, 0, 0))
+    slot_pos = jax.lax.dynamic_update_slice(cache["slot_pos"], t[None].astype(jnp.int32), (idx,))
+    window = cfg.local_window if kind == "attn_local" else None
+    mask = _scores_mask(pos, slot_pos[None, :], causal=True, window=window)
+    out = _attend(cfg, q, ck, cv, mask)
+    w = params["wo"]["w"].astype(x.dtype)
+    return out @ w, {"k": ck, "v": cv, "slot_pos": slot_pos}

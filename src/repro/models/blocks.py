@@ -1,0 +1,108 @@
+"""Per-layer blocks: assemble attention/MoE/SSD/RG-LRU into residual blocks."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import config as C
+from .attention import attention, decode_attention, init_attention, init_kv_cache
+from .layers import init_mlp, init_norm, mlp, norm
+from .moe import init_moe, moe_forward
+from .rglru import init_rglru, init_rglru_cache, rglru_decode, rglru_forward
+from .ssm import init_ssd, init_ssd_cache, ssd_decode, ssd_forward
+
+
+def init_block(key, cfg, kind: str):
+    ks = jax.random.split(key, 8)
+    nk = cfg.norm_kind
+    if kind in (C.ATTN, C.ATTN_LOCAL, C.MOE):
+        p = {
+            "ln1": init_norm(ks[0], cfg.d_model, nk),
+            "attn": init_attention(ks[1], cfg, kind),
+            "ln2": init_norm(ks[2], cfg.d_model, nk),
+        }
+        if kind == C.MOE:
+            p["moe"] = init_moe(ks[3], cfg)
+        else:
+            p["mlp"] = init_mlp(ks[3], cfg.d_model, cfg.d_ff, cfg.mlp_kind)
+        if cfg.use_post_norm:
+            p["pn1"] = init_norm(ks[4], cfg.d_model, nk)
+            p["pn2"] = init_norm(ks[5], cfg.d_model, nk)
+        return p
+    if kind == C.SSD:
+        return {"ln1": init_norm(ks[0], cfg.d_model, nk), "ssd": init_ssd(ks[1], cfg)}
+    if kind == C.RGLRU:
+        return {
+            "ln1": init_norm(ks[0], cfg.d_model, nk),
+            "rec": init_rglru(ks[1], cfg),
+            "ln2": init_norm(ks[2], cfg.d_model, nk),
+            "mlp": init_mlp(ks[3], cfg.d_model, cfg.d_ff, cfg.mlp_kind),
+        }
+    raise ValueError(kind)
+
+
+def _post(params, cfg, name, y):
+    return norm(params[name], y, cfg.norm_kind) if cfg.use_post_norm else y
+
+
+def block_forward(params, cfg, kind, x, positions, *, encoder=False):
+    """Returns (x', aux) with aux = {'aux_loss': scalar} for MoE blocks."""
+    aux = {"aux_loss": jnp.float32(0.0)}
+    if kind in (C.ATTN, C.ATTN_LOCAL, C.MOE):
+        h = attention(params["attn"], cfg, kind,
+                      norm(params["ln1"], x, cfg.norm_kind), positions,
+                      encoder=encoder)
+        x = x + _post(params, cfg, "pn1", h)
+        if kind == C.MOE:
+            h, mstats = moe_forward(params["moe"], cfg,
+                                    norm(params["ln2"], x, cfg.norm_kind))
+            aux["aux_loss"] = mstats["aux_loss"]
+        else:
+            h = mlp(params["mlp"], norm(params["ln2"], x, cfg.norm_kind), cfg.mlp_kind)
+        x = x + _post(params, cfg, "pn2", h)
+        return x, aux
+    if kind == C.SSD:
+        h = ssd_forward(cfg, params["ssd"], norm(params["ln1"], x, cfg.norm_kind))
+        return x + h, aux
+    if kind == C.RGLRU:
+        h = rglru_forward(cfg, params["rec"], norm(params["ln1"], x, cfg.norm_kind))
+        x = x + h
+        h = mlp(params["mlp"], norm(params["ln2"], x, cfg.norm_kind), cfg.mlp_kind)
+        return x + h, aux
+    raise ValueError(kind)
+
+
+def init_block_cache(cfg, kind, batch, max_len, dtype=jnp.bfloat16):
+    if kind in (C.ATTN, C.ATTN_LOCAL, C.MOE):
+        return init_kv_cache(cfg, kind, batch, max_len, dtype)
+    if kind == C.SSD:
+        return init_ssd_cache(cfg, batch, dtype)
+    if kind == C.RGLRU:
+        return init_rglru_cache(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+def block_decode(params, cfg, kind, cache, x, t):
+    """One-token step. x: (B,1,E).  Returns (x', cache')."""
+    if kind in (C.ATTN, C.ATTN_LOCAL, C.MOE):
+        h, cache = decode_attention(params["attn"], cfg, kind, cache,
+                                    norm(params["ln1"], x, cfg.norm_kind), t)
+        x = x + _post(params, cfg, "pn1", h)
+        if kind == C.MOE:
+            h, _ = moe_forward(params["moe"], cfg,
+                               norm(params["ln2"], x, cfg.norm_kind))
+        else:
+            h = mlp(params["mlp"], norm(params["ln2"], x, cfg.norm_kind), cfg.mlp_kind)
+        x = x + _post(params, cfg, "pn2", h)
+        return x, cache
+    if kind == C.SSD:
+        h, cache = ssd_decode(cfg, params["ssd"], cache,
+                              norm(params["ln1"], x, cfg.norm_kind), t)
+        return x + h, cache
+    if kind == C.RGLRU:
+        h, cache = rglru_decode(cfg, params["rec"], cache,
+                                norm(params["ln1"], x, cfg.norm_kind), t)
+        x = x + h
+        h = mlp(params["mlp"], norm(params["ln2"], x, cfg.norm_kind), cfg.mlp_kind)
+        return x + h, cache
+    raise ValueError(kind)

@@ -1,0 +1,141 @@
+"""Chunked (flash-style) attention in pure JAX: online softmax over KV
+chunks, query chunking over a scan — never materializes the (S, L) score
+matrix.  This is the memory-feasible path for 4k-training / 32k-prefill
+shapes; local-window layers use a banded variant that only touches the
+window (O(S*W) instead of O(S^2)).
+
+On real TPU the same tiling maps to a Pallas kernel; the dry-run lowers
+this XLA path (Pallas has no CPU lowering), and the roofline analysis
+reads its HLO.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _mask_tile(q_pos, k_pos, causal, window):
+    """(…,Sq,1) x (…,1,Ck) -> additive f32 mask tile."""
+    valid = k_pos[..., None, :] >= 0
+    if causal:
+        valid &= k_pos[..., None, :] <= q_pos[..., :, None]
+    if window is not None:
+        valid &= (q_pos[..., :, None] - k_pos[..., None, :]) < window
+    return jnp.where(valid, 0.0, NEG_INF)
+
+
+def _tile_scores(qc, kc, softcap):
+    """qc: (B,Cq,Hk,G,D), kc: (B,Ck,Hk,D) -> (B,Hk,G,Cq,Ck) f32."""
+    d = qc.shape[-1]
+    s = jnp.einsum("bqkgd,bckd->bkgqc", qc, kc) / math.sqrt(d)
+    s = s.astype(jnp.float32)
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    return s
+
+
+def _online_update(carry, s, vc):
+    """Standard streaming-softmax accumulator update."""
+    m, l, acc = carry
+    m_new = jnp.maximum(m, s.max(axis=-1))
+    alpha = jnp.exp(m - m_new)
+    p = jnp.exp(s - m_new[..., None])
+    l_new = l * alpha + p.sum(axis=-1)
+    pv = jnp.einsum("bkgqc,bckd->bkgqd", p.astype(vc.dtype), vc)
+    acc_new = acc * alpha[..., None].astype(acc.dtype) + pv
+    return m_new, l_new, acc_new
+
+
+def chunked_attention(
+    q: jnp.ndarray,        # (B, S, H, D)
+    k: jnp.ndarray,        # (B, L, Hk, D)
+    v: jnp.ndarray,        # (B, L, Hk, D)
+    q_pos: jnp.ndarray,    # (B, S) absolute positions
+    k_pos: jnp.ndarray,    # (B, L)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+) -> jnp.ndarray:
+    """Returns (B, S, H*D)."""
+    b, s, h, d = q.shape
+    l, hk = k.shape[1], k.shape[2]
+    g = h // hk
+    q_chunk = min(q_chunk, s)
+    kv_chunk = min(kv_chunk, l)
+    s_orig = s
+    # pad to chunk multiples; padded KV rows get position -1 (masked out)
+    if s % q_chunk:
+        pq = q_chunk - s % q_chunk
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, pq)))
+        s += pq
+    if l % kv_chunk:
+        pk = kv_chunk - l % kv_chunk
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pk)), constant_values=-1)
+        l += pk
+    nq, nk = s // q_chunk, l // kv_chunk
+
+    q5 = q.reshape(b, nq, q_chunk, hk, g, d)
+    qp = q_pos.reshape(b, nq, q_chunk)
+    k4 = k.reshape(b, nk, kv_chunk, hk, d)
+    v4 = v.reshape(b, nk, kv_chunk, hk, d)
+    kp = k_pos.reshape(b, nk, kv_chunk)
+
+    banded = window is not None and window < l
+    if banded:
+        # only the KV band [q_end - tile_len, q_end) can be visible
+        tile_len = -(-(window + q_chunk) // kv_chunk) * kv_chunk
+
+    def q_step(_, xs):
+        qc, qpc, qi = xs                      # (B,Cq,Hk,G,D), (B,Cq), ()
+        m0 = jnp.full((b, hk, g, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hk, g, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, hk, g, q_chunk, d), q.dtype)
+
+        if banded:
+            q_end = (qi + 1) * q_chunk
+            start = jnp.clip(q_end - tile_len, 0, l - tile_len)
+            kc = jax.lax.dynamic_slice(
+                k, (0, start, 0, 0), (b, tile_len, hk, d))
+            vc = jax.lax.dynamic_slice(
+                v, (0, start, 0, 0), (b, tile_len, hk, d))
+            kpc = jax.lax.dynamic_slice(k_pos, (0, start), (b, tile_len))
+            sc = _tile_scores(qc, kc, softcap)
+            sc = sc + _mask_tile(qpc, kpc, causal, window)[:, None, None]
+            mq, lq, accq = _online_update((m0, l0, a0), sc, vc)
+        else:
+            # remat the tile step: without it the scan saves every
+            # (Cq, Ck) score tile for backward, defeating flash attention
+            @jax.checkpoint
+            def kv_step(carry, ys):
+                kc, vc, kpc = ys
+                sc = _tile_scores(qc, kc, softcap)
+                sc = sc + _mask_tile(qpc, kpc, causal, window)[:, None, None]
+                return _online_update(carry, sc, vc), None
+
+            (mq, lq, accq), _ = jax.lax.scan(
+                kv_step, (m0, l0, a0),
+                (k4.swapaxes(0, 1), v4.swapaxes(0, 1), kp.swapaxes(0, 1)),
+            )
+        out = accq / jnp.maximum(lq, 1e-30)[..., None].astype(accq.dtype)
+        # (B,Hk,G,Cq,D) -> (B,Cq,H*D)
+        out = out.transpose(0, 3, 1, 2, 4).reshape(b, q_chunk, h * d)
+        return None, out
+
+    _, outs = jax.lax.scan(
+        jax.checkpoint(q_step), None,
+        (q5.swapaxes(0, 1), qp.swapaxes(0, 1), jnp.arange(nq)),
+    )
+    # (nq, B, Cq, H*D) -> (B, S, H*D), dropping query padding
+    return outs.transpose(1, 0, 2, 3).reshape(b, s, h * d)[:, :s_orig]

@@ -1,0 +1,132 @@
+"""Shared neural building blocks (pure functional: params = nested dicts)."""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+Params = dict[str, Any]
+
+# logical sharding axes (resolved to mesh axes by launch/mesh.py rules)
+FSDP = "fsdp"    # parameter/optimizer sharding axes (pod, data)
+TP = "model"     # tensor-parallel axis
+DP = "dp"        # batch axes (pod, data)
+
+
+def _init_dense(key, in_dim, out_dims, scale=None):
+    shape = (in_dim,) + tuple(out_dims)
+    fan_in = in_dim
+    std = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return jax.random.normal(key, shape, jnp.float32) * std
+
+
+def dense(params, x, *, bias_key=None):
+    """x @ W (+ b). W: (in, *out).  Contraction over the last axis of x."""
+    w = params["w"].astype(x.dtype)
+    out_rank = w.ndim - 1
+    y = jax.lax.dot_general(
+        x, w, (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=x.dtype,
+    )
+    if bias_key and bias_key in params:
+        y = y + params[bias_key].astype(x.dtype)
+    return y
+
+
+def init_norm(key, dim, kind="rmsnorm"):
+    p = {"scale": jnp.zeros((dim,), jnp.float32)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((dim,), jnp.float32)
+    return p
+
+
+def norm(params, x, kind="rmsnorm", eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+        y = x * jax.lax.rsqrt(var + eps) * (1.0 + params["scale"])
+    else:
+        mu = jnp.mean(x, axis=-1, keepdims=True)
+        var = jnp.var(x, axis=-1, keepdims=True)
+        y = (x - mu) * jax.lax.rsqrt(var + eps) * (1.0 + params["scale"]) + params["bias"]
+    return y.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (B, S, H, D); positions: (B, S) int32."""
+    freqs = rope_frequencies(x.shape[-1], theta)                  # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs     # (B, S, D/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model, d_ff, kind="swiglu"):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if kind in ("swiglu", "geglu"):
+        return {
+            "wi": {"w": _init_dense(k1, d_model, (d_ff,))},
+            "wg": {"w": _init_dense(k2, d_model, (d_ff,))},
+            "wo": {"w": _init_dense(k3, d_ff, (d_model,))},
+        }
+    return {
+        "wi": {"w": _init_dense(k1, d_model, (d_ff,))},
+        "wo": {"w": _init_dense(k3, d_ff, (d_model,))},
+    }
+
+
+def mlp(params, x, kind="swiglu"):
+    if kind == "swiglu":
+        h = jax.nn.silu(dense(params["wg"], x)) * dense(params["wi"], x)
+    elif kind == "geglu":
+        h = jax.nn.gelu(dense(params["wg"], x), approximate=True) * dense(params["wi"], x)
+    else:
+        h = jax.nn.gelu(dense(params["wi"], x), approximate=True)
+    return dense(params["wo"], h)
+
+
+# ---------------------------------------------------------------------------
+# embeddings / head
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, vocab, d_model):
+    return {"table": jax.random.normal(key, (vocab, d_model), jnp.float32) * 0.02}
+
+
+def embed(params, ids, scale=False):
+    t = params["table"]
+    y = t[ids]
+    if scale:
+        y = y * math.sqrt(t.shape[-1])
+    return y
+
+
+def unembed(params, x, tied_table=None):
+    table = tied_table if tied_table is not None else params["table"]
+    return jnp.einsum("...e,ve->...v", x, table.astype(x.dtype))
+
+
+def shard_hint(x, spec: P):
+    """Best-effort sharding constraint (no-op off-mesh)."""
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except Exception:
+        return x

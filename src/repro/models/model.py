@@ -1,0 +1,116 @@
+"""Language-model assembly: embeddings -> layer stack -> head, plus the
+train loss, decode step, and per-shape input specs used by the dry-run."""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import embed, init_embedding, init_norm, norm, unembed
+from .stack import init_stack, init_stack_cache, stack_decode, stack_forward
+
+Params = dict[str, Any]
+IGNORE = -1  # label id for masked-out positions (e.g. frontend prefix)
+
+
+def init_lm(cfg: ModelConfig, key) -> Params:
+    ks = jax.random.split(key, 4)
+    p: Params = {
+        "embed": init_embedding(ks[0], cfg.padded_vocab, cfg.d_model),
+        "stack": init_stack(ks[1], cfg),
+        "final_norm": init_norm(ks[2], cfg.d_model, cfg.norm_kind),
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = init_embedding(ks[3], cfg.padded_vocab, cfg.d_model)
+    return p
+
+
+def _embed_inputs(params, cfg, batch):
+    """Token embeddings, with the modality-frontend stub prefix when the
+    architecture has one (internvl2 patches / hubert frames)."""
+    dtype = jnp.dtype(cfg.dtype)
+    x = embed(params["embed"], batch["tokens"], scale=cfg.emb_scale).astype(dtype)
+    if cfg.frontend:
+        fe = batch["frontend_embeds"].astype(dtype)
+        if cfg.emb_scale:
+            fe = fe * math.sqrt(cfg.d_model)
+        x = jnp.concatenate([fe, x], axis=1)
+    return x
+
+
+def forward(params: Params, cfg: ModelConfig, batch, *, remat=True):
+    """Returns (logits (B, S_total, V_pad), aux_loss)."""
+    x = _embed_inputs(params, cfg, batch)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x, aux = stack_forward(params["stack"], cfg, x, positions,
+                           encoder=not cfg.causal, remat=remat)
+    x = norm(params["final_norm"], x, cfg.norm_kind)
+    head = params["embed"] if cfg.tie_embeddings else params["head"]
+    logits = unembed(head, x)
+    return logits, aux
+
+
+def loss_fn(params: Params, cfg: ModelConfig, batch, *, remat=True,
+            aux_weight: float = 0.01):
+    """Next-token (decoder) or frame-label (encoder) cross entropy.
+    batch["labels"]: (B, S_total) int32 with IGNORE for masked positions."""
+    logits, aux = forward(params, cfg, batch, remat=remat)
+    labels = batch["labels"]
+    logits = logits.astype(jnp.float32)
+    # mask padded vocab tail
+    if cfg.padded_vocab != cfg.vocab_size:
+        pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab_size
+        logits = jnp.where(pad_mask, -1e30, logits)
+    valid = labels != IGNORE
+    safe = jnp.maximum(labels, 0)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+    n = jnp.maximum(valid.sum(), 1)
+    loss = jnp.where(valid, nll, 0.0).sum() / n
+    metrics = {"loss": loss, "aux_loss": aux, "tokens": n}
+    return loss + aux_weight * aux, metrics
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    assert cfg.has_decode, f"{cfg.name} is encoder-only: no decode step"
+    return init_stack_cache(cfg, batch, max_len, dtype)
+
+
+def prefill(params, cfg, batch, cache):
+    """Run the full prompt through `forward`, then *populate* the cache by
+    scanning decode steps is wasteful — instead serving uses block hashes +
+    the DHT prefix cache (serving/prefix_cache.py).  Here we return logits
+    for the last position to seed decode."""
+    logits, _ = forward(params, cfg, batch, remat=False)
+    return logits[:, -1]
+
+
+def decode_step(params: Params, cfg: ModelConfig, cache, tokens, t):
+    """One decode step.  tokens: (B, 1) int32; t: scalar int32 position.
+    Returns (logits (B, V_pad), cache')."""
+    dtype = jnp.dtype(cfg.dtype)
+    x = embed(params["embed"], tokens, scale=cfg.emb_scale).astype(dtype)
+    x, cache = stack_decode(params["stack"], cfg, cache, x, t)
+    x = norm(params["final_norm"], x, cfg.norm_kind)
+    head = params["embed"] if cfg.tie_embeddings else params["head"]
+    logits = unembed(head, x)[:, 0]
+    return logits, cache
+
+
+def greedy_sample(logits, cfg):
+    if cfg.padded_vocab != cfg.vocab_size:
+        pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab_size
+        logits = jnp.where(pad_mask, -jnp.inf, logits)
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def param_count(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))

@@ -1,0 +1,121 @@
+"""Mixture-of-Experts layer with capacity-factor token dispatch.
+
+The dispatch machinery is the same sort-based capacity binning the DHT
+router uses (``repro.core.dht._conflict_rank`` — one substrate, two
+clients, per DESIGN.md §6): tokens are ranked within their expert bin and
+dropped past capacity (standard switch-style semantics; dropped tokens
+pass through the residual).
+
+Sharding layout: token groups ride the data axes, experts ride the model
+axis, so expert compute is local per (data, model) mesh cell after the
+FSDP weight all-gather; the roofline analysis sees the combine-side
+collectives explicitly.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dht import _conflict_rank
+from .layers import _init_dense
+
+
+def init_moe(key, cfg):
+    e = cfg.d_model
+    f = cfg.d_ff_expert or cfg.d_ff
+    x = cfg.n_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": {"w": _init_dense(ks[0], e, (x,), scale=0.02)},
+        "wi": {"w": _init_dense(ks[1], e, (x, f)).transpose(1, 0, 2)},   # (X, E, F)
+        "wg": {"w": _init_dense(ks[2], e, (x, f)).transpose(1, 0, 2)},
+        "wo": {"w": _init_dense(ks[3], f, (x, e)).transpose(1, 0, 2)},   # (X, F, E)
+    }
+    if cfg.n_shared_experts:
+        from .layers import init_mlp
+
+        p["shared"] = init_mlp(ks[4], e, f * cfg.n_shared_experts, cfg.mlp_kind)
+    return p
+
+
+def _pick_groups(t: int, want: int) -> int:
+    g = min(want, t)
+    while t % g:
+        g -= 1
+    return max(g, 1)
+
+
+def moe_forward(params, cfg, x, *, n_groups: int = 32):
+    """x: (B, S, E) -> (B, S, E).  Capacity-dropped tokens contribute 0
+    (residual passes them through)."""
+    b, s, e = x.shape
+    t = b * s
+    k = cfg.experts_per_token
+    nx = cfg.n_experts
+    g = _pick_groups(t, n_groups)
+    sg = t // g
+    cap = max(8, int(math.ceil(sg * k / nx * cfg.expert_capacity_factor)))
+
+    xt = x.reshape(g, sg, e)
+    logits = jnp.einsum(
+        "gse,ex->gsx", xt.astype(jnp.float32), params["router"]["w"])
+    gate_all = jax.nn.softmax(logits, axis=-1)
+    gate_k, idx_k = jax.lax.top_k(gate_all, k)                    # (g, sg, k)
+    gate_k = gate_k / jnp.maximum(gate_k.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (switch-style)
+    density = jnp.mean(
+        jax.nn.one_hot(idx_k[..., 0], nx, dtype=jnp.float32), axis=(0, 1))
+    aux = nx * jnp.sum(density * jnp.mean(gate_all, axis=(0, 1)))
+
+    # per-group positions within each expert bin (sort-based, shared w/ DHT)
+    dest = idx_k.reshape(g, sg * k)
+    pos = jax.vmap(
+        lambda d: _conflict_rank(d, jnp.ones_like(d, dtype=bool)))(dest)
+    kept = pos < cap
+
+    slot = dest * cap + jnp.minimum(pos, cap - 1)                 # (g, sg*k)
+    slot = jnp.where(kept, slot, nx * cap)                        # drop row
+
+    # dispatch: (g, X*cap, e) via ONE scatter over the repeated tokens.
+    # (A per-choice scatter loop was tried and refuted: k passes re-write
+    # the whole buffer each time — see EXPERIMENTS.md §Perf M1.)
+    xk = jnp.repeat(xt, k, axis=1)                                # (g, sg*k, e)
+    buf = jnp.zeros((g, nx * cap, e), x.dtype)
+    buf = jax.vmap(lambda bf, sl, xv: bf.at[sl].set(xv, mode="drop"))(buf, slot, xk)
+    buf = buf.reshape(g, nx, cap, e)
+
+    # expert FFN (swiglu/geglu/gelu per cfg.mlp_kind)
+    wi = params["wi"]["w"].astype(x.dtype)
+    wo = params["wo"]["w"].astype(x.dtype)
+    hi = jnp.einsum("gxce,xef->gxcf", buf, wi)
+    if cfg.mlp_kind in ("swiglu", "geglu"):
+        wg = params["wg"]["w"].astype(x.dtype)
+        hg = jnp.einsum("gxce,xef->gxcf", buf, wg)
+        act = jax.nn.silu if cfg.mlp_kind == "swiglu" else (
+            lambda v: jax.nn.gelu(v, approximate=True))
+        hi = act(hg) * hi
+    else:
+        hi = jax.nn.gelu(hi, approximate=True)
+    out_buf = jnp.einsum("gxcf,xfe->gxce", hi, wo).reshape(g, nx * cap, e)
+
+    # combine: gather each token's k expert outputs, weighted sum in the
+    # compute dtype (bf16) to avoid f32 promotion of the (g,sg,k,e) tensor
+    safe_slot = jnp.minimum(slot, nx * cap - 1)
+    gathered = jax.vmap(lambda ob, sl: ob[sl])(out_buf, safe_slot)  # (g, sg*k, e)
+    gathered = jnp.where(kept[..., None], gathered, 0)
+    gathered = gathered.reshape(g, sg, k, e)
+    y = jnp.einsum("gske,gsk->gse", gathered, gate_k.astype(x.dtype))
+
+    if "shared" in params:
+        from .layers import mlp
+
+        y = y + mlp(params["shared"], xt, cfg.mlp_kind)
+
+    stats = {
+        "aux_loss": aux,
+        "dropped": jnp.sum(~kept).astype(jnp.int32),
+    }
+    return y.reshape(b, s, e), stats

@@ -1,0 +1,99 @@
+"""RecurrentGemma / Griffin recurrent block (RG-LRU) — arXiv:2402.19427.
+
+Block: two branches from the input —
+  gate branch  : linear -> GeLU
+  signal branch: linear -> causal conv1d -> RG-LRU
+merged by elementwise product, then a linear out projection.
+
+RG-LRU recurrence (per channel):
+  r_t = sigmoid(W_a x_t),  i_t = sigmoid(W_x x_t)
+  a_t = exp(-c * softplus(Lambda) * r_t)         (c = 8)
+  h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training/prefill evaluates the linear recurrence with an associative scan
+(log-depth on TPU); decode is the O(1) step.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import _init_dense
+
+_C = 8.0
+
+
+def init_rglru(key, cfg):
+    e = cfg.d_model
+    w = cfg.lru_width or e
+    ks = jax.random.split(key, 7)
+    return {
+        "gate_in": {"w": _init_dense(ks[0], e, (w,))},
+        "sig_in": {"w": _init_dense(ks[1], e, (w,))},
+        "conv": {"w": jax.random.normal(ks[2], (cfg.conv_width, w), jnp.float32) * 0.1},
+        "wa": {"w": _init_dense(ks[3], w, (w,))},
+        "wx": {"w": _init_dense(ks[4], w, (w,))},
+        "lam": jnp.full((w,), 1.0, jnp.float32),   # softplus(1) ~ 1.31 decay scale
+        "out": {"w": _init_dense(ks[5], w, (e,))},
+    }
+
+
+def _conv_causal(w, x):
+    width = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(width):
+        out = out + pad[:, i:i + x.shape[1], :] * w[i]
+    return out
+
+
+def _gates(params, x):
+    r = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", x, params["wa"]["w"].astype(x.dtype)))
+    i = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", x, params["wx"]["w"].astype(x.dtype)))
+    log_a = -_C * jax.nn.softplus(params["lam"]) * r.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (
+        i.astype(jnp.float32) * x.astype(jnp.float32))
+    return a, gated
+
+
+def rglru_forward(cfg, params, x_in):
+    """x_in: (B, S, E) -> (B, S, E)."""
+    gate = jax.nn.gelu(
+        jnp.einsum("bse,ew->bsw", x_in, params["gate_in"]["w"].astype(x_in.dtype)))
+    sig = jnp.einsum("bse,ew->bsw", x_in, params["sig_in"]["w"].astype(x_in.dtype))
+    sig = _conv_causal(params["conv"]["w"].astype(sig.dtype), sig)
+    a, gated = _gates(params, sig)
+
+    # h_t = a_t h_{t-1} + b_t  via associative scan over time
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, b2 + a2 * b1
+
+    _, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    h = h.astype(x_in.dtype) * gate
+    return jnp.einsum("bsw,we->bse", h, params["out"]["w"].astype(x_in.dtype))
+
+
+def init_rglru_cache(cfg, batch, dtype=jnp.float32):
+    w = cfg.lru_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, w), dtype),
+    }
+
+
+def rglru_decode(cfg, params, cache, x_in, t):
+    """x_in: (B, 1, E) -> (out, cache')."""
+    gate = jax.nn.gelu(
+        jnp.einsum("bse,ew->bsw", x_in, params["gate_in"]["w"].astype(x_in.dtype)))
+    sig = jnp.einsum("bse,ew->bsw", x_in, params["sig_in"]["w"].astype(x_in.dtype))
+    hist = jnp.concatenate([cache["conv"].astype(sig.dtype), sig], axis=1)
+    w = params["conv"]["w"].astype(sig.dtype)
+    sig1 = jnp.einsum("bwc,wc->bc", hist, w)[:, None, :]
+    a, gated = _gates(params, sig1)
+    h = a[:, 0] * cache["h"] + gated[:, 0]
+    out = h[:, None, :].astype(x_in.dtype) * gate
+    out = jnp.einsum("bsw,we->bse", out, params["out"]["w"].astype(x_in.dtype))
+    return out, {"h": h, "conv": hist[:, 1:, :]}

@@ -1,0 +1,161 @@
+"""Mamba-2 SSD (state-space duality) block — arXiv:2405.21060.
+
+Training/prefill uses the chunked SSD algorithm (intra-chunk quadratic
+term + inter-chunk linear recurrence over a lax.scan), decode uses the
+O(1) recurrent update.  Head layout follows the paper: d_inner split into
+heads of size ``ssm_head_dim``; B/C are shared across heads (one group).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import _init_dense, init_norm, norm
+
+
+def init_ssd(key, cfg):
+    e = cfg.d_model
+    di = cfg.d_inner
+    st = cfg.ssm_state
+    nh = cfg.ssm_heads
+    cw = cfg.ssm_conv
+    ks = jax.random.split(key, 4)
+    return {
+        # fused input projection: [z (di), x (di), B (st), C (st), dt (nh)]
+        "in_proj": {"w": _init_dense(ks[0], e, (2 * di + 2 * st + nh,))},
+        "conv": {"w": jax.random.normal(ks[1], (cw, di + 2 * st), jnp.float32) * 0.1},
+        "A_log": jnp.zeros((nh,), jnp.float32),     # A = -exp(A_log)
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm": init_norm(ks[2], di),
+        "out_proj": {"w": _init_dense(ks[3], di, (e,))},
+    }
+
+
+def _split_proj(cfg, zxbcdt):
+    di, st, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:2 * di + 2 * st]
+    dt = zxbcdt[..., 2 * di + 2 * st:]
+    return z, xbc, dt
+
+
+def _causal_conv(w, x):
+    """Depthwise causal conv along time.  x: (B,S,C); w: (W,C)."""
+    width = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(width):  # width is 4 — unrolled taps
+        out = out + pad[:, i:i + x.shape[1], :] * w[i]
+    return jax.nn.silu(out)
+
+
+def _segsum(a):
+    """log-space cumulative segment sums: out[..., i, j] = sum_{j<k<=i} a_k."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), k=0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_forward(cfg, params, x_in, *, chunk=None):
+    """Full-sequence SSD.  x_in: (B, S, E) -> (B, S, E)."""
+    chunk = chunk or cfg.ssm_chunk
+    b, s, _ = x_in.shape
+    di, st, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    zxbcdt = jnp.einsum("bse,ef->bsf", x_in, params["in_proj"]["w"].astype(x_in.dtype))
+    z, xbc, dt = _split_proj(cfg, zxbcdt)
+    xbc = _causal_conv(params["conv"]["w"].astype(x_in.dtype), xbc)
+    x = xbc[..., :di].reshape(b, s, nh, hd)
+    B = xbc[..., di:di + st]
+    C = xbc[..., di + st:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])   # (B,S,nh)
+    A = -jnp.exp(params["A_log"])                                       # (nh,)
+
+    q = min(chunk, s)
+    s_orig = s
+    if s % q:  # pad the tail chunk; padded outputs are sliced away below
+        pad = q - s % q
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        z = jnp.pad(z, ((0, 0), (0, pad), (0, 0)))
+        s += pad
+    nc = s // q
+    xq = x.reshape(b, nc, q, nh, hd).astype(jnp.float32)
+    Bq = B.reshape(b, nc, q, st).astype(jnp.float32)
+    Cq = C.reshape(b, nc, q, st).astype(jnp.float32)
+    dtq = dt.reshape(b, nc, q, nh)
+    dA = dtq * A                                                        # (B,nc,q,nh)
+
+    # intra-chunk (quadratic within chunk)
+    L = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))                      # (B,nc,nh,q,q)
+    scores = jnp.einsum("bcqn,bcsn->bcqs", Cq, Bq)                      # state-dim contraction
+    xbar = xq * dtq[..., None]                                          # dt discretizes B
+    y_diag = jnp.einsum("bcqs,bchqs,bcshp->bcqhp", scores, L, xbar)
+
+    # chunk summaries
+    dA_cum = jnp.cumsum(dA, axis=2)                                     # (B,nc,q,nh)
+    decay_to_end = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum)               # (B,nc,q,nh)
+    states = jnp.einsum("bcsn,bcsh,bcshp->bchpn", Bq, decay_to_end * dtq, xq)
+
+    # inter-chunk linear recurrence
+    chunk_decay = jnp.exp(dA_cum[:, :, -1, :])                          # (B,nc,nh)
+
+    def scan_fn(h, ys):
+        st_c, dec = ys                                                  # (B,nh,hd,st), (B,nh)
+        h_new = h * dec[..., None, None] + st_c
+        return h_new, h
+
+    h0 = jnp.zeros((b, nh, hd, st), jnp.float32)
+    _, prev = jax.lax.scan(
+        scan_fn, h0, (states.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)))
+    prev = prev.swapaxes(0, 1)                                          # (B,nc,nh,hd,st)
+
+    decay_in = jnp.exp(dA_cum)                                          # (B,nc,q,nh)
+    y_off = jnp.einsum("bcqn,bchpn,bcqh->bcqhp", Cq, prev, decay_in)
+
+    y = (y_diag + y_off).reshape(b, s, nh, hd)
+    y = y + xq.reshape(b, s, nh, hd) * params["D"][None, None, :, None]
+    y = y.reshape(b, s, di)[:, :s_orig].astype(x_in.dtype)
+    y = y * jax.nn.silu(z[:, :s_orig])
+    y = norm(params["norm"], y)
+    return jnp.einsum("bsd,de->bse", y, params["out_proj"]["w"].astype(x_in.dtype))
+
+
+def init_ssd_cache(cfg, batch, dtype=jnp.float32):
+    return {
+        "h": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner + 2 * cfg.ssm_state), dtype),
+    }
+
+
+def ssd_decode(cfg, params, cache, x_in, t):
+    """One-token recurrent update.  x_in: (B, 1, E)."""
+    b = x_in.shape[0]
+    di, st, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    zxbcdt = jnp.einsum("bse,ef->bsf", x_in, params["in_proj"]["w"].astype(x_in.dtype))
+    z, xbc, dt = _split_proj(cfg, zxbcdt)
+    # causal conv over [cache, current]
+    hist = jnp.concatenate([cache["conv"].astype(xbc.dtype), xbc], axis=1)  # (B, W, C)
+    w = params["conv"]["w"].astype(xbc.dtype)
+    conv_out = jax.nn.silu(jnp.einsum("bwc,wc->bc", hist, w))[:, None, :]
+    new_conv = hist[:, 1:, :]
+
+    x = conv_out[..., :di].reshape(b, nh, hd)
+    B = conv_out[:, 0, di:di + st]
+    C = conv_out[:, 0, di + st:]
+    dt_ = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"])  # (B,nh)
+    A = -jnp.exp(params["A_log"])
+    dA = jnp.exp(dt_ * A)                                               # (B,nh)
+    h = cache["h"] * dA[..., None, None] + jnp.einsum(
+        "bn,bh,bhp->bhpn", B.astype(jnp.float32), dt_, x.astype(jnp.float32))
+    y = jnp.einsum("bn,bhpn->bhp", C.astype(jnp.float32), h)
+    y = y + x.astype(jnp.float32) * params["D"][None, :, None]
+    y = y.reshape(b, 1, di).astype(x_in.dtype)
+    y = y * jax.nn.silu(z)
+    y = norm(params["norm"], y)
+    out = jnp.einsum("bsd,de->bse", y, params["out_proj"]["w"].astype(x_in.dtype))
+    return out, {"h": h, "conv": new_conv}

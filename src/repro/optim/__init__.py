@@ -1,0 +1,1 @@
+from .adamw import AdamWConfig, apply_updates, init_opt_state, lr_at  # noqa: F401

@@ -1,0 +1,78 @@
+"""Int8-compressed gradient reduce-scatter over an explicit shard_map.
+
+`optim.adamw.maybe_compress_grads` quantize-dequantizes *locally* (useful
+for convergence studies), but inside jit the cross-replica reduction still
+moves f32.  This module actually reduces the wire traffic: each replica
+quantizes its gradient to int8 chunks (one f32 scale per chunk), the
+chunks cross the data-parallel axis as int8 via all_to_all, and each
+replica dequantizes + sums only its OWN shard — reduce-scatter semantics
+at ~1/4 the bytes, matching the ZeRO layout where a replica only updates
+its parameter shard.
+
+Error model: per-chunk max-abs quantization; the sum of R dequantized
+int8 tensors deviates from the f32 sum by at most R * step/2 elementwise
+(step = chunk_max/127) — bounded and unbiased enough for SGD-family
+training (tests/test_compressed_reduce.py checks the bound).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _quant(x: jnp.ndarray):
+    """x: (R, C) -> int8 (R, C), scales (R, 1)."""
+    scale = jnp.maximum(jnp.max(jnp.abs(x), axis=-1, keepdims=True), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _dequant(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def make_compressed_reduce(mesh: Mesh, axis: str, n: int):
+    """Returns reduce(per_replica_grads (R, n)) -> (n,) mean over `axis`,
+    computed with int8 wire traffic.  Input dim 0 is sharded over `axis`
+    (each replica contributes its own gradient); the output is the
+    reduce-scattered mean laid out over the same axis (ZeRO shard order).
+    `n` must be a multiple of the axis size (use pad_to)."""
+    r = dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
+    assert n % r == 0, (n, r)
+    chunk = n // r
+
+    def local(flat):
+        # flat: (1, n) — this replica's own gradient
+        parts = flat[0].reshape(r, chunk)
+        q, s = _quant(parts)                      # (r, chunk) int8, (r,1)
+        # all_to_all: send chunk j to replica j; receive every replica's
+        # contribution to MY chunk — int8 on the wire
+        q_t = jax.lax.all_to_all(q, axis, 0, 0)   # (r, chunk) from each src
+        s_t = jax.lax.all_to_all(s, axis, 0, 0)   # (r, 1)
+        shard_mean = jnp.sum(_dequant(q_t, s_t), axis=0) / r   # (chunk,)
+        return shard_mean
+
+    fn = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=P(axis, None),
+        out_specs=P(axis),       # reduce-scattered result
+        check_vma=False,
+    )
+    return jax.jit(fn)
+
+
+def pad_to(x: jnp.ndarray, multiple: int) -> jnp.ndarray:
+    n = x.shape[0]
+    m = -(-n // multiple) * multiple
+    return jnp.pad(x, (0, m - n)) if m != n else x
+
+
+def wire_bytes(n: int, r: int) -> dict[str, int]:
+    """Traffic accounting for the report: int8 path vs f32 all-reduce."""
+    int8_path = n * 1 + (r * 4)          # int8 payload + per-chunk scales
+    f32_allreduce = n * 4 * 2            # ring all-reduce moves ~2x data
+    return {"int8_alltoall": int8_path, "f32_allreduce": f32_allreduce,
+            "ratio": f32_allreduce / max(int8_path, 1)}

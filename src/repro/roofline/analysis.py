@@ -1,0 +1,177 @@
+"""Three-term roofline from a compiled dry-run artifact.
+
+    compute    = HLO_FLOPs        / (chips * peak_FLOP/s)
+    memory     = HLO_bytes        / (chips * HBM_bw)
+    collective = collective_bytes / (chips * link_bw)
+
+FLOPs/bytes come from ``compiled.cost_analysis()``.  Collective bytes are
+NOT in cost_analysis: we parse the optimized HLO text and sum operand
+sizes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute instruction.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+# TPU v5e-class hardware constants (per chip)
+PEAK_FLOPS = 197e12        # bf16
+HBM_BW = 819e9             # bytes/s
+LINK_BW = 50e9             # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  bf16[16,4096,128]{2,1,0}  or  f32[]
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+# ops look like:  %name = TYPE[...] all-gather(...), or fusion kinds
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+"
+    r"([a-z\-]+)(\(|\.)")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum output-shape bytes per collective kind over the module.
+
+    Output-shape accounting: for all-gather/all-to-all the output is the
+    materialized traffic; for all-reduce it equals the operand; for
+    reduce-scatter the operand is the traffic, output = operand/shards —
+    we take max(operand, output) per instruction to be conservative.
+
+    bf16 adjustment: the CPU backend's float-normalization pass wraps bf16
+    collectives in f32 converts (convert -> collective(f32) -> convert); a
+    real TPU moves bf16 natively, so collectives whose operand is such a
+    convert fusion are counted at half width.  The unadjusted figure is
+    reported alongside (key ``_raw_f32_upcast_bytes``)."""
+    out: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    counts: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    upcast_raw = 0
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        ty, op = m.group(1), m.group(2)
+        kind = None
+        for c in _COLLECTIVES:
+            if op.startswith(c):
+                kind = c
+                break
+        if kind is None:
+            continue
+        rest = line.split(m.group(2), 1)[1]
+        out_bytes = _shape_bytes(ty)
+        arg_bytes = _shape_bytes(rest)
+        b = max(out_bytes, arg_bytes)
+        args = rest.split(")", 1)[0]
+        if "f32" in ty and "convert" in args:
+            upcast_raw += b
+            b //= 2  # TPU-native bf16 collective; CPU upcast artifact
+        out[kind] += b
+        counts[kind] += 1
+    out["_counts"] = counts  # type: ignore[assignment]
+    out["_raw_f32_upcast_bytes"] = upcast_raw  # type: ignore[assignment]
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float               # total HLO flops (global, per step)
+    hbm_bytes: float           # total bytes accessed (global)
+    coll_bytes: float          # total collective bytes (global)
+    chips: int
+    model_flops: float = 0.0   # 6*N*D analytic useful flops
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / (self.chips * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / (self.chips * LINK_BW)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time(self) -> float:
+        """Perfect-overlap lower bound: max of the three terms."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_ratio(self) -> float:
+        return self.model_flops / self.flops if self.flops else 0.0
+
+    @property
+    def mfu(self) -> float:
+        """Model FLOPs utilization at the roofline-bound step time."""
+        t = self.step_time
+        if t <= 0:
+            return 0.0
+        return self.model_flops / (t * self.chips * PEAK_FLOPS)
+
+    def as_dict(self) -> dict:
+        return {
+            "flops": self.flops, "hbm_bytes": self.hbm_bytes,
+            "coll_bytes": self.coll_bytes, "chips": self.chips,
+            "model_flops": self.model_flops,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck, "useful_ratio": self.useful_ratio,
+            "mfu_bound": self.mfu,
+        }
+
+
+def analyze(compiled, hlo_text: str, chips: int, model_flops: float) -> Roofline:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    coll = collective_bytes(hlo_text)
+    total_coll = sum(v for k, v in coll.items() if not k.startswith("_"))
+    return Roofline(
+        flops=float(ca.get("flops", 0.0)),
+        hbm_bytes=float(ca.get("bytes accessed", 0.0)),
+        coll_bytes=float(total_coll),
+        chips=chips,
+        model_flops=model_flops,
+    )
+
+
+def model_flops_for(cfg, shape_kind: str, seq: int, batch: int) -> float:
+    """MODEL_FLOPS = 6*N*D (train) or 2*N*D (forward-only), with
+    N = active params (MoE counts routed+shared only)."""
+    n_active = cfg.active_param_count()
+    if shape_kind == "train":
+        tokens = seq * batch
+        return 6.0 * n_active * tokens
+    if shape_kind == "prefill":
+        tokens = seq * batch
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence in the batch
+    return 2.0 * n_active * batch

@@ -1,0 +1,3 @@
+from .engine import Engine, GenerationResult  # noqa: F401
+from .prefix_cache import PrefixCache  # noqa: F401
+from .serve_step import make_serve_step  # noqa: F401

@@ -1,0 +1,102 @@
+"""Batched serving engine: DHT prefix cache -> suffix prefill -> decode.
+
+Flow per batch of equal-length prompts (rectangular batching; continuous
+batching over ragged prompts is an orthogonal scheduler concern):
+
+  1. chain-hash prompt blocks, DHT lookup -> longest fully cached block run
+  2. fetch those pages from the pool (zero prefill compute for them)
+  3. prefill only the suffix, attending over the fetched prefix KV
+  4. publish the new blocks' KV (pages + DHT pointers) for future requests
+  5. seed the decode cache with [prefix, suffix] KV and decode greedily
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import decode_step, greedy_sample, init_cache
+from repro.models.model import IGNORE  # noqa: F401  (re-export convenience)
+from .prefill import prefill_collect
+from .prefix_cache import PrefixCache
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    tokens: np.ndarray          # (B, max_new)
+    prefill_tokens_computed: int
+    prefill_tokens_cached: int
+    cache_stats: dict
+
+
+class Engine:
+    def __init__(self, model_cfg, params, *, max_len=4096, page_size=64,
+                 pool_pages=512, dtype=jnp.bfloat16):
+        self.cfg = model_cfg
+        self.params = params
+        self.max_len = max_len
+        self.page_size = page_size
+        self.dtype = dtype
+        self.prefix_cache = PrefixCache(
+            model_cfg, n_pages=pool_pages, page_size=page_size, dtype=dtype)
+        self._decode = jax.jit(
+            lambda p, c, tok, t: decode_step(p, model_cfg, c, tok, t))
+
+    def _seed_cache(self, batch_size, prompt_len, pk, pv, ks, vs):
+        """Build the decode cache with [prefix, suffix] KV in place.
+        pk/ks: (L, B, S, Hk, D) or None."""
+        cache = init_cache(self.cfg, batch_size, self.max_len, self.dtype)
+        parts_k = [x for x in (pk, ks) if x is not None]
+        parts_v = [x for x in (pv, vs) if x is not None]
+        k_all = jnp.concatenate(parts_k, axis=2) if len(parts_k) > 1 else parts_k[0]
+        v_all = jnp.concatenate(parts_v, axis=2) if len(parts_v) > 1 else parts_v[0]
+        # homogeneous stacks: cache["scan"]["b0"]["k"]: (L, B, max_len, Hk, D)
+        blk = cache["scan"]["b0"]
+        blk["k"] = blk["k"].at[:, :, :prompt_len].set(k_all.astype(blk["k"].dtype))
+        blk["v"] = blk["v"].at[:, :, :prompt_len].set(v_all.astype(blk["v"].dtype))
+        slot = jnp.where(jnp.arange(self.max_len) < prompt_len,
+                         jnp.arange(self.max_len, dtype=jnp.int32),
+                         jnp.int32(-1))
+        blk["slot_pos"] = jnp.broadcast_to(slot, blk["slot_pos"].shape).astype(jnp.int32)
+        return cache
+
+    def generate(self, prompts: np.ndarray, max_new_tokens: int) -> GenerationResult:
+        prompts = np.asarray(prompts, np.int32)
+        b, s = prompts.shape
+        assert s % self.page_size == 0, "prompts padded to page multiples"
+        assert s + max_new_tokens <= self.max_len
+
+        n_pref, page_ids = self.prefix_cache.lookup(prompts)
+        p_tok = n_pref * self.page_size
+        prefix = self.prefix_cache.fetch_prefix(page_ids) if n_pref else None
+
+        suffix = prompts[:, p_tok:]
+        if suffix.shape[1] > 0:
+            batch = {"tokens": jnp.asarray(suffix)}
+            logits_last, ks, vs = prefill_collect(
+                self.params, self.cfg, batch, kv_prefix=prefix)
+            self.prefix_cache.publish(prompts, n_pref, ks, vs)
+            pk, pv = (prefix[0], prefix[1]) if prefix is not None else (None, None)
+            cache = self._seed_cache(b, s, pk, pv, ks, vs)
+        else:
+            # full-prefix hit: zero prefill compute.  Seed the cache from
+            # pages and recover the last-position logits with one decode
+            # step on the final prompt token (its KV rewrite is idempotent).
+            cache = self._seed_cache(b, s, prefix[0], prefix[1], None, None)
+            logits_last, cache = self._decode(
+                self.params, cache, jnp.asarray(prompts[:, -1:]), jnp.int32(s - 1))
+
+        out = np.zeros((b, max_new_tokens), np.int32)
+        tok = greedy_sample(logits_last, self.cfg)[:, None]
+        for i in range(max_new_tokens):
+            out[:, i] = np.asarray(tok[:, 0])
+            logits, cache = self._decode(self.params, cache, tok, jnp.int32(s + i))
+            tok = greedy_sample(logits, self.cfg)[:, None]
+        return GenerationResult(
+            tokens=out,
+            prefill_tokens_computed=int(suffix.shape[1]) * b,
+            prefill_tokens_cached=p_tok * b,
+            cache_stats=dict(self.prefix_cache.stats),
+        )

@@ -1,0 +1,77 @@
+"""KV-collecting prefill for homogeneous-attention stacks (period == 1:
+llama3 / qwen1.5 / starcoder2 / internvl2 / llama4 / qwen3-moe).
+
+Used by the DHT prefix cache: prefill returns every layer's (K, V) so new
+blocks can be published to the page pool, and accepts an already-cached
+prefix (pk, pv, positions) so only the suffix is computed — the paper's
+surrogate reuse, applied to prompt processing.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import config as C
+from repro.models.attention import attention
+from repro.models.layers import embed, mlp, norm, unembed
+from repro.models.model import _embed_inputs
+from repro.models.moe import moe_forward
+from repro.models.stack import find_period
+
+
+def _check(cfg):
+    p, _, tail = find_period(cfg.block_pattern)
+    kind = cfg.block_pattern[0]
+    assert p == 1 and tail == 0 and kind in (C.ATTN, C.MOE), (
+        f"prefix cache supports homogeneous global-attention stacks; "
+        f"{cfg.name} has period {p} (see DESIGN.md §6)")
+    return kind
+
+
+def prefill_collect(params, cfg, batch, kv_prefix=None):
+    """Returns (logits_last (B, V), k_all, v_all) with
+    k_all: (L, B, S, Hk, D) for the *suffix* tokens computed here.
+
+    kv_prefix: optional (pk (L,B,P,Hk,D), pv, p_pos (B,P)) — cached pages;
+    padded/invalid prefix rows carry position -1 and are masked out."""
+    kind = _check(cfg)
+    x = _embed_inputs(params, cfg, batch)
+    b, s, _ = x.shape
+    p_len = 0 if kv_prefix is None else kv_prefix[0].shape[2]
+    positions = jnp.broadcast_to(
+        jnp.arange(s, dtype=jnp.int32) + p_len, (b, s))
+
+    def body(x, xs):
+        if kv_prefix is None:
+            lparams = xs
+            prefix = None
+        else:
+            lparams, pk, pv = xs
+            prefix = (pk, pv, kv_prefix[2])
+        blk = lparams["b0"]
+        h_in = norm(blk["ln1"], x, cfg.norm_kind)
+        h, (k, v) = attention(blk["attn"], cfg, C.ATTN, h_in, positions,
+                              kv_prefix=prefix, collect_kv=True)
+        if cfg.use_post_norm:
+            h = norm(blk["pn1"], h, cfg.norm_kind)
+        x = x + h
+        h_in = norm(blk["ln2"], x, cfg.norm_kind)
+        if kind == C.MOE:
+            h, _ = moe_forward(blk["moe"], cfg, h_in)
+        else:
+            h = mlp(blk["mlp"], h_in, cfg.mlp_kind)
+        if cfg.use_post_norm:
+            h = norm(blk["pn2"], h, cfg.norm_kind)
+        x = x + h
+        return x, (k, v)
+
+    stack = params["stack"]["scan"]
+    if kv_prefix is None:
+        x, (ks, vs) = jax.lax.scan(body, x, stack)
+    else:
+        pk, pv, _ = kv_prefix
+        x, (ks, vs) = jax.lax.scan(body, x, (stack, pk, pv))
+    x = norm(params["final_norm"], x, cfg.norm_kind)
+    head = params["embed"] if cfg.tie_embeddings else params["head"]
+    logits = unembed(head, x[:, -1])
+    return logits, ks, vs

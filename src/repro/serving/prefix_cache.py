@@ -1,0 +1,189 @@
+"""Distributed prefix cache: DHT pointers into a paged KV pool.
+
+This is the paper's surrogate-model pattern applied to LM serving
+(DESIGN.md §5): the expensive computation is prompt prefill; the DHT maps
+*chained block hashes* of prompt token blocks to (page_id, generation)
+pointers into a device-resident paged KV pool.  A repeated prefix skips
+its prefill exactly like POET skips PHREEQC for a seen chemistry input.
+
+Consistency is the lock-free design from the paper: pointers are validated
+optimistically — a page may have been recycled by the allocator after the
+pointer was written, so every hit re-checks the pool generation (the
+serving-layer analogue of the checksum re-check; a stale pointer is just a
+cache miss, never a correctness problem).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import DHTConfig, DHTState, dht_create, dht_read, dht_write
+from repro.core.async_sim import hash64_np
+
+KEY_WORDS = 4   # (chain_hi, chain_lo, block_index, salt)
+VAL_WORDS = 4   # (page_id, generation, chain_hi echo, 0)
+
+
+def dht_config(n_shards: int = 1, buckets_per_shard: int = 1 << 12) -> DHTConfig:
+    return DHTConfig(key_words=KEY_WORDS, val_words=VAL_WORDS,
+                     n_shards=n_shards, buckets_per_shard=buckets_per_shard)
+
+
+def chain_block_keys(tokens: np.ndarray, page_size: int) -> np.ndarray:
+    """tokens: (S,) ints, S % page_size == 0 -> (n_blocks, KEY_WORDS) keys.
+    key_i = H(key_{i-1} || block_i): a hit on block i implies the whole
+    prefix matches."""
+    s = len(tokens)
+    assert s % page_size == 0, (s, page_size)
+    n = s // page_size
+    keys = np.zeros((n, KEY_WORDS), np.uint32)
+    prev = np.zeros(2, np.uint32)
+    for i in range(n):
+        block = np.asarray(tokens[i * page_size:(i + 1) * page_size], np.uint32)
+        words = np.concatenate([prev, block]).astype(np.uint32)[None]
+        hi, lo = hash64_np(words, )
+        prev = np.array([hi[0], lo[0]], np.uint32)
+        keys[i] = (prev[0], prev[1], np.uint32(i), np.uint32(0x9E37))
+    return keys
+
+
+@dataclasses.dataclass
+class PagePool:
+    """Device-resident paged KV storage: one page = page_size tokens of
+    every layer's K and V."""
+
+    k: jnp.ndarray           # (n_pages, L, page_size, Hk, D)
+    v: jnp.ndarray
+    gen: np.ndarray          # (n_pages,) host-side generation counters
+    fifo: deque              # allocation order (recycled oldest-first)
+    free: list
+    page_size: int
+
+    @classmethod
+    def create(cls, n_pages, n_layers, page_size, n_kv_heads, head_dim,
+               dtype=jnp.bfloat16):
+        shape = (n_pages, n_layers, page_size, n_kv_heads, head_dim)
+        return cls(
+            k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+            gen=np.zeros((n_pages,), np.int32),
+            fifo=deque(), free=list(range(n_pages)), page_size=page_size,
+        )
+
+    def alloc(self, n: int) -> np.ndarray:
+        ids = []
+        for _ in range(n):
+            if self.free:
+                pid = self.free.pop()
+            else:
+                pid = self.fifo.popleft()       # recycle oldest
+                self.gen[pid] += 1              # invalidates stale pointers
+            self.fifo.append(pid)
+            ids.append(pid)
+        return np.asarray(ids, np.int32)
+
+    def write(self, ids: np.ndarray, k_pages: jnp.ndarray, v_pages: jnp.ndarray):
+        """k_pages: (n, L, page_size, Hk, D)."""
+        idx = jnp.asarray(ids)
+        self.k = self.k.at[idx].set(k_pages.astype(self.k.dtype))
+        self.v = self.v.at[idx].set(v_pages.astype(self.v.dtype))
+
+    def read(self, ids: np.ndarray):
+        idx = jnp.asarray(ids)
+        return self.k[idx], self.v[idx]
+
+
+class PrefixCache:
+    """Host-side coordinator tying the DHT to the page pool."""
+
+    def __init__(self, model_cfg, n_pages=256, page_size=64,
+                 dht_shards=1, dht_buckets=1 << 12, dtype=jnp.bfloat16):
+        self.cfg = model_cfg
+        self.page_size = page_size
+        self.dht = dht_create(dht_config(dht_shards, dht_buckets))
+        self.pool = PagePool.create(
+            n_pages, model_cfg.n_layers, page_size,
+            model_cfg.n_kv_heads, model_cfg.head_dim, dtype)
+        self.stats = {"block_hits": 0, "block_misses": 0, "stale": 0,
+                      "published": 0}
+
+    # -- lookup ------------------------------------------------------------
+    def lookup(self, prompts: np.ndarray) -> tuple[int, np.ndarray]:
+        """prompts: (B, S).  Returns (n_prefix_blocks, page_ids (B, n)) —
+        the longest block run cached for *all* requests (keeps the batch
+        rectangular; per-request ragged prefixes are a documented
+        extension)."""
+        b, s = prompts.shape
+        n_blocks = s // self.page_size
+        keys = np.stack([chain_block_keys(prompts[i], self.page_size)
+                         for i in range(b)])          # (B, n_blocks, KW)
+        flat = jnp.asarray(keys.reshape(-1, KEY_WORDS))
+        self.dht, vals, found, _ = dht_read(self.dht, flat)
+        vals = np.asarray(vals).reshape(b, n_blocks, VAL_WORDS)
+        found = np.asarray(found).reshape(b, n_blocks)
+        page_ids = vals[..., 0].astype(np.int64)
+        gen = vals[..., 1].astype(np.int64)
+        fresh = found & (gen == self.pool.gen[np.clip(page_ids, 0,
+                                                      len(self.pool.gen) - 1)])
+        self.stats["stale"] += int((found & ~fresh).sum())
+        ok_run = 0
+        for j in range(n_blocks):
+            if fresh[:, j].all():
+                ok_run += 1
+            else:
+                break
+        self.stats["block_hits"] += ok_run * b
+        self.stats["block_misses"] += (n_blocks - ok_run) * b
+        return ok_run, page_ids[:, :ok_run].astype(np.int32)
+
+    def fetch_prefix(self, page_ids: np.ndarray):
+        """page_ids: (B, n).  Returns (pk (L,B,P,Hk,D), pv, p_pos (B,P))."""
+        b, n = page_ids.shape
+        if n == 0:
+            return None
+        kp, vp = self.pool.read(page_ids.reshape(-1))   # (B*n, L, ps, Hk, D)
+        l = kp.shape[1]
+        ps = self.page_size
+
+        def arrange(x):
+            x = x.reshape(b, n, l, ps, *x.shape[3:])
+            return jnp.moveaxis(x, 2, 0).reshape(l, b, n * ps, *x.shape[4:])
+
+        p_pos = jnp.broadcast_to(jnp.arange(n * ps, dtype=jnp.int32), (b, n * ps))
+        return arrange(kp), arrange(vp), p_pos
+
+    # -- publish -----------------------------------------------------------
+    def publish(self, prompts: np.ndarray, start_block: int,
+                ks: jnp.ndarray, vs: jnp.ndarray):
+        """Publish suffix KV.  ks: (L, B, S_suf, Hk, D) from prefill_collect;
+        suffix starts at block `start_block` of each prompt."""
+        l, b, s_suf = ks.shape[:3]
+        ps = self.page_size
+        n_new = s_suf // ps
+        if n_new == 0:
+            return
+        keys = np.stack([chain_block_keys(prompts[i], ps)
+                         for i in range(b)])           # (B, n_blocks, KW)
+        new_keys = keys[:, start_block:start_block + n_new]
+        ids = self.pool.alloc(b * n_new)               # (B*n_new,)
+        # (L,B,S,Hk,D) -> (B*n_new, L, ps, Hk, D)
+        pages = jnp.moveaxis(
+            ks.reshape(l, b, n_new, ps, *ks.shape[3:]), 0, 2
+        ).reshape(b * n_new, l, ps, *ks.shape[3:])
+        vpages = jnp.moveaxis(
+            vs.reshape(l, b, n_new, ps, *vs.shape[3:]), 0, 2
+        ).reshape(b * n_new, l, ps, *vs.shape[3:])
+        self.pool.write(ids, pages, vpages)
+
+        vals = np.zeros((b * n_new, VAL_WORDS), np.uint32)
+        vals[:, 0] = ids.astype(np.uint32)
+        vals[:, 1] = self.pool.gen[ids].astype(np.uint32)
+        vals[:, 2] = new_keys.reshape(-1, KEY_WORDS)[:, 0]
+        self.dht, _ = dht_write(
+            self.dht,
+            jnp.asarray(new_keys.reshape(-1, KEY_WORDS)),
+            jnp.asarray(vals))
+        self.stats["published"] += b * n_new

@@ -1,0 +1,18 @@
+"""The jitted one-token serve step lowered by the dry-run for decode shapes."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import decode_step, greedy_sample
+from repro.models.config import ModelConfig
+
+
+def make_serve_step(cfg: ModelConfig):
+    """serve_step(params, cache, tokens (B,1), t) -> (next_tokens (B,), cache')."""
+
+    def serve_step(params, cache, tokens, t):
+        logits, cache = decode_step(params, cfg, cache, tokens, t)
+        return greedy_sample(logits, cfg), cache
+
+    return serve_step

@@ -1,0 +1,2 @@
+from .train_step import make_train_state, make_train_step  # noqa: F401
+from .trainer import FailureInjector, TrainerConfig, run  # noqa: F401

@@ -1,0 +1,159 @@
+"""DHT behaviour: the paper's API semantics under all three consistency
+modes, plus property-based invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    DHTConfig,
+    dht_create,
+    dht_read,
+    dht_write,
+    occupancy,
+)
+from repro.core.layout import INVALID, MODES, OCCUPIED
+
+KW, VW = 20, 26
+
+
+def _kv(n, seed=0):
+    rng = np.random.default_rng(seed)
+    keys = jnp.asarray(rng.integers(0, 2**31, size=(n, KW)), jnp.uint32)
+    vals = jnp.asarray(rng.integers(0, 2**31, size=(n, VW)), jnp.uint32)
+    return keys, vals
+
+
+@pytest.fixture(params=MODES)
+def mode(request):
+    return request.param
+
+
+def test_write_then_read_roundtrip(mode):
+    cfg = DHTConfig(n_shards=8, buckets_per_shard=512, mode=mode)
+    st_ = dht_create(cfg)
+    keys, vals = _kv(200)
+    st_, ws = dht_write(st_, keys, vals)
+    assert int(ws["inserted"]) == 200
+    st_, out, found, rs = dht_read(st_, keys)
+    assert bool(found.all())
+    assert bool((out == vals).all())
+    assert int(rs["hits"]) == 200
+
+
+def test_update_semantics(mode):
+    cfg = DHTConfig(n_shards=4, buckets_per_shard=512, mode=mode)
+    st_ = dht_create(cfg)
+    keys, vals = _kv(64)
+    st_, _ = dht_write(st_, keys, vals)
+    st_, ws = dht_write(st_, keys, vals + 1)
+    assert int(ws["updated"]) == 64, "same key must update, not insert"
+    st_, out, found, _ = dht_read(st_, keys)
+    assert bool((out == vals + 1).all())
+
+
+def test_miss_on_unknown_keys(mode):
+    cfg = DHTConfig(n_shards=4, buckets_per_shard=512, mode=mode)
+    st_ = dht_create(cfg)
+    keys, vals = _kv(64)
+    other, _ = _kv(64, seed=99)
+    st_, _ = dht_write(st_, keys, vals)
+    st_, out, found, rs = dht_read(st_, other)
+    assert not bool(found.any())
+    assert int(rs["misses"]) == 64
+
+
+def test_duplicate_batch_last_writer_wins(mode):
+    cfg = DHTConfig(n_shards=4, buckets_per_shard=512, mode=mode)
+    st_ = dht_create(cfg)
+    keys, vals = _kv(16)
+    dup_keys = jnp.concatenate([keys, keys])
+    dup_vals = jnp.concatenate([vals + 5, vals + 11])
+    st_, _ = dht_write(st_, dup_keys, dup_vals)
+    st_, out, found, _ = dht_read(st_, keys)
+    assert bool(found.all())
+    assert bool((out == vals + 11).all())
+
+
+def test_eviction_when_window_exhausted():
+    cfg = DHTConfig(n_shards=1, buckets_per_shard=8, n_probe=4)
+    st_ = dht_create(cfg)
+    keys, vals = _kv(100)
+    st_, ws = dht_write(st_, keys, vals)
+    assert int(ws["evicted"]) > 0
+    # occupancy never exceeds capacity
+    assert float(occupancy(st_).max()) <= 1.0
+
+
+def test_checksum_mismatch_invalidates_and_reclaims():
+    cfg = DHTConfig(n_shards=4, buckets_per_shard=512, mode="lockfree")
+    st_ = dht_create(cfg)
+    keys, vals = _kv(64)
+    st_, _ = dht_write(st_, keys, vals)
+    st_.csum = st_.csum ^ jnp.uint32(0xDEADBEEF)   # corrupt every bucket
+    st_, out, found, rs = dht_read(st_, keys)
+    assert not bool(found.any()), "corrupted buckets must not return data"
+    assert int(rs["mismatches"]) == 64
+    assert int(((np.asarray(st_.meta) & INVALID) != 0).sum()) >= 64 * 0 + 1
+    # writes reclaim invalid buckets (paper §4.2)
+    st_, _ = dht_write(st_, keys, vals)
+    st_, out, found, _ = dht_read(st_, keys)
+    assert bool(found.all()) and bool((out == vals).all())
+
+
+def test_locked_modes_round_counts():
+    keys, vals = _kv(64)
+    # all keys to the same bucket -> coarse/fine serialize fully
+    same = jnp.broadcast_to(keys[0], keys.shape)
+    for mode_, min_rounds in (("fine", 2), ("coarse", 2)):
+        cfg = DHTConfig(n_shards=2, buckets_per_shard=256, mode=mode_)
+        st_ = dht_create(cfg)
+        st_, ws = dht_write(st_, same, vals)
+        assert int(ws["rounds"]) >= min_rounds
+        assert int(ws["lock_tokens"]) > 0
+    cfg = DHTConfig(n_shards=2, buckets_per_shard=256, mode="lockfree")
+    st_ = dht_create(cfg)
+    st_, ws = dht_write(st_, same, vals)
+    assert int(ws["lock_tokens"]) == 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 300), st.integers(0, 2**31 - 1))
+def test_property_read_your_writes(n, seed):
+    """For any batch of distinct random keys that fits capacity, every
+    written key is readable with its exact value (lock-free mode)."""
+    cfg = DHTConfig(n_shards=4, buckets_per_shard=2048, mode="lockfree",
+                    capacity=n)
+    st_ = dht_create(cfg)
+    keys, vals = _kv(n, seed=seed)
+    st_, _ = dht_write(st_, keys, vals)
+    st_, out, found, _ = dht_read(st_, keys)
+    assert bool(found.all())
+    assert bool((out == vals).all())
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.sampled_from(list(MODES)))
+def test_property_modes_agree_on_final_state(seed, mode_):
+    """All three consistency modes must produce identical logical content
+    for a conflict-free batch (they differ only in cost)."""
+    keys, vals = _kv(100, seed=seed)
+    outs = []
+    cfg = DHTConfig(n_shards=4, buckets_per_shard=1024, mode=mode_)
+    st_ = dht_create(cfg)
+    st_, _ = dht_write(st_, keys, vals)
+    st_, out, found, _ = dht_read(st_, keys)
+    assert bool(found.all()) and bool((out == vals).all())
+
+
+def test_routing_overflow_is_miss_not_error():
+    cfg = DHTConfig(n_shards=4, buckets_per_shard=1024, capacity=2)
+    st_ = dht_create(cfg)
+    keys, vals = _kv(64)
+    st_, ws = dht_write(st_, keys, vals)
+    assert int(ws["dropped"]) > 0
+    st_, out, found, rs = dht_read(st_, keys)
+    # dropped writes are misses later; everything found matches exactly
+    ok = np.asarray(found)
+    assert (np.asarray(out)[ok] == np.asarray(vals)[ok]).all()

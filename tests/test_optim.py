@@ -1,0 +1,78 @@
+"""Optimizer: AdamW semantics, schedules, gradient compression, bf16+master."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim.adamw import (
+    AdamWConfig,
+    apply_updates,
+    compress_int8,
+    decompress_int8,
+    init_opt_state,
+    lr_at,
+    sparsify_topk,
+)
+
+
+def test_lr_schedule_shapes():
+    cfg = AdamWConfig(lr=1e-3, warmup_steps=10, total_steps=100)
+    assert float(lr_at(cfg, jnp.int32(0))) == 0.0
+    assert abs(float(lr_at(cfg, jnp.int32(10))) - 1e-3) < 1e-9
+    assert float(lr_at(cfg, jnp.int32(100))) <= 1e-3 * cfg.min_lr_ratio + 1e-9
+
+
+def test_int8_compression_roundtrip_bounded():
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.normal(size=(256, 64)) * 3.0, jnp.float32)
+    q, s = compress_int8(g)
+    back = decompress_int8(q, s)
+    assert q.dtype == jnp.int8
+    # error bounded by half a quantization step
+    step = float(jnp.max(jnp.abs(g))) / 127.0
+    assert float(jnp.abs(back - g).max()) <= step * 0.5 + 1e-6
+
+
+def test_topk_sparsifier_keeps_largest():
+    g = jnp.asarray(np.arange(100, dtype=np.float32) - 50.0)
+    out = sparsify_topk(g, 0.1)
+    nz = np.nonzero(np.asarray(out))[0]
+    assert len(nz) <= 12
+    assert 0 in nz  # -50 is among the largest magnitudes
+
+
+@pytest.mark.parametrize("compression", ["int8", "topk"])
+def test_training_with_compression_decreases_loss(compression):
+    from repro.configs import get_config, reduced
+    from repro.data import DataConfig, get_batch
+    from repro.train import make_train_state, make_train_step
+
+    cfg = reduced(get_config("starcoder2-3b"), n_layers=2)
+    ocfg = AdamWConfig(lr=3e-3, warmup_steps=2, total_steps=20,
+                       compression=compression, topk_ratio=0.2)
+    params, opt = make_train_state(cfg, jax.random.PRNGKey(0))
+    step = make_train_step(cfg, ocfg)
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=32, global_batch=8)
+    losses = []
+    for i in range(12):
+        raw = get_batch(dcfg, i)
+        batch = {k: jnp.asarray(v) for k, v in raw.items()}
+        params, opt, m = step(params, opt, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0], losses
+
+
+def test_bf16_params_with_f32_master_update():
+    params = {"w": jnp.ones((8, 8), jnp.bfloat16)}
+    state = init_opt_state(params, master=True)
+    assert state["master"]["w"].dtype == jnp.float32
+    grads = {"w": jnp.full((8, 8), 0.5, jnp.bfloat16)}
+    cfg = AdamWConfig(lr=1e-2, warmup_steps=0, total_steps=10, weight_decay=0.0)
+    p2, s2, m = apply_updates(cfg, params, grads, state)
+    assert p2["w"].dtype == jnp.bfloat16
+    assert s2["master"]["w"].dtype == jnp.float32
+    # master moved down (positive grads), bf16 params track it
+    assert float(s2["master"]["w"][0, 0]) < 1.0
+    np.testing.assert_allclose(
+        np.asarray(p2["w"], np.float32),
+        np.asarray(s2["master"]["w"]).astype(np.float32), atol=1e-2)

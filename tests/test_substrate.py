@@ -1,0 +1,149 @@
+"""Data pipeline, checkpointing (incl. elastic DHT rehash), trainer
+fault-tolerance, serving engine, memoization."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_step, rehash_dht, restore, save
+from repro.configs import get_config, reduced
+from repro.core import DHTConfig, dht_create, dht_read, dht_write
+from repro.data import DataConfig, ShardInfo, get_batch, reassign_straggler
+from repro.data.memo import create as memo_create, lookup_or_process, memo_config
+from repro.models import init_lm
+from repro.optim import AdamWConfig
+from repro.serving import Engine
+from repro.train import FailureInjector, TrainerConfig, run
+
+
+def test_data_determinism_and_sharding():
+    cfg = DataConfig(vocab_size=512, seq_len=16, global_batch=8)
+    a = get_batch(cfg, step=3)
+    b = get_batch(cfg, step=3)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    # two shards partition the global batch exactly
+    s0 = get_batch(cfg, 3, ShardInfo(0, 2))
+    s1 = get_batch(cfg, 3, ShardInfo(1, 2))
+    np.testing.assert_array_equal(
+        np.concatenate([s0["tokens"], s1["tokens"]]), a["tokens"])
+    # different steps differ
+    c = get_batch(cfg, step=4)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_straggler_reassignment_covers_everything():
+    cfg = DataConfig(vocab_size=512, seq_len=16, global_batch=12)
+    shard = ShardInfo(0, 4)
+    dead = 2
+    covered = []
+    for s in range(4):
+        if s == dead:
+            continue
+        covered.extend(
+            reassign_straggler(cfg, 7, dead, ShardInfo(s, 4)).tolist())
+    from repro.data.pipeline import batch_doc_ids
+
+    expect = batch_doc_ids(cfg, 7, ShardInfo(dead, 4)).tolist()
+    assert sorted(covered) == sorted(expect)
+
+
+def test_checkpoint_roundtrip_atomic():
+    tree = {"a": jnp.arange(10, dtype=jnp.float32),
+            "b": {"c": jnp.ones((3, 4), jnp.bfloat16),
+                  "d": [jnp.int32(7), jnp.zeros(2)]}}
+    with tempfile.TemporaryDirectory() as d:
+        save(d, 5, tree)
+        save(d, 10, tree)
+        assert latest_step(d) == 10
+        step, back = restore(d, tree)
+        assert step == 10
+        for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+        # older checkpoint still restorable
+        step5, _ = restore(d, tree, step=5)
+        assert step5 == 5
+
+
+def test_elastic_dht_rehash_preserves_entries():
+    """Paper §6 future work: resize the table at checkpoint/restart."""
+    cfg = DHTConfig(n_shards=4, buckets_per_shard=1024)
+    st_ = dht_create(cfg)
+    rng = np.random.default_rng(0)
+    keys = jnp.asarray(rng.integers(0, 2**31, size=(200, 20)), jnp.uint32)
+    vals = jnp.asarray(rng.integers(0, 2**31, size=(200, 26)), jnp.uint32)
+    st_, _ = dht_write(st_, keys, vals)
+    # grow 4 shards -> 8 shards (elastic up), then shrink to 2 (elastic down)
+    for new_shards in (8, 2):
+        new_cfg = DHTConfig(n_shards=new_shards, buckets_per_shard=1024)
+        st2 = rehash_dht(st_, new_cfg)
+        st2, out, found, _ = dht_read(st2, keys)
+        assert bool(found.all()), f"rehash to {new_shards} lost entries"
+        assert bool((out == vals).all())
+
+
+def test_trainer_failure_restart_exact():
+    cfg = reduced(get_config("mamba2-370m"), n_layers=2)
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=16, global_batch=4)
+    ocfg = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=20)
+    with tempfile.TemporaryDirectory() as d:
+        tcfg = TrainerConfig(total_steps=12, checkpoint_every=5,
+                             checkpoint_dir=d, log_every=100)
+        with pytest.raises(RuntimeError, match="injected failure"):
+            run(cfg, dcfg, ocfg, tcfg, failure=FailureInjector(fail_at_step=8),
+                log=lambda *_: None)
+        assert latest_step(d) == 5
+        params, _, hist = run(cfg, dcfg, ocfg, tcfg, log=lambda *_: None)
+        # a run with no failure must produce the identical final params
+        with tempfile.TemporaryDirectory() as d2:
+            tcfg2 = TrainerConfig(total_steps=12, checkpoint_every=100,
+                                  checkpoint_dir=d2, log_every=100)
+            params_ref, _, _ = run(cfg, dcfg, ocfg, tcfg2, log=lambda *_: None)
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(params_ref)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_memoized_preprocessing_hits_across_epochs():
+    state = memo_create(memo_config())
+    ids = jnp.arange(100, dtype=jnp.int32)
+    state, d1, hits1 = lookup_or_process(state, ids)
+    assert int(hits1) == 0
+    state, d2, hits2 = lookup_or_process(state, ids)
+    assert int(hits2) == 100
+    np.testing.assert_array_equal(np.asarray(d1), np.asarray(d2))
+
+
+def test_engine_warm_equals_cold_and_counts():
+    cfg = reduced(get_config("qwen1.5-32b"), n_layers=2)
+    params = init_lm(cfg, jax.random.PRNGKey(3))
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab_size, size=(2, 64)).astype(np.int32)
+    eng = Engine(cfg, params, max_len=128, page_size=32, pool_pages=32,
+                 dtype=jnp.float32)
+    r1 = eng.generate(prompts, 6)
+    r2 = eng.generate(prompts, 6)
+    np.testing.assert_array_equal(r1.tokens, r2.tokens)
+    assert r1.prefill_tokens_cached == 0
+    assert r2.prefill_tokens_cached == prompts.size
+    assert r2.prefill_tokens_computed == 0
+
+
+def test_engine_pool_eviction_invalidates_stale_pointers():
+    cfg = reduced(get_config("qwen1.5-32b"), n_layers=2)
+    params = init_lm(cfg, jax.random.PRNGKey(3))
+    rng = np.random.default_rng(1)
+    # pool of 4 pages; each prompt needs 2 pages x batch 1
+    eng = Engine(cfg, params, max_len=128, page_size=32, pool_pages=4,
+                 dtype=jnp.float32)
+    p1 = rng.integers(0, cfg.vocab_size, size=(1, 64)).astype(np.int32)
+    p2 = rng.integers(0, cfg.vocab_size, size=(1, 64)).astype(np.int32)
+    p3 = rng.integers(0, cfg.vocab_size, size=(1, 64)).astype(np.int32)
+    r1a = eng.generate(p1, 4)
+    eng.generate(p2, 4)
+    eng.generate(p3, 4)      # evicts p1's pages (4-page pool)
+    r1b = eng.generate(p1, 4)  # stale pointers must be detected, recomputed
+    np.testing.assert_array_equal(r1a.tokens, r1b.tokens)
+    assert eng.prefix_cache.stats["stale"] >= 0
+    assert r1b.prefill_tokens_computed > 0

@@ -1,0 +1,40 @@
+"""End-to-end behaviour tests for the paper's system: the POET-analogue
+coupled reactive-transport simulation with the DHT surrogate (paper §5.4)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+
+def test_poet_sim_with_and_without_dht_agree():
+    """Fig. 7's correctness premise: the DHT-cached simulation must match
+    the uncached one within the key-rounding tolerance."""
+    from examples.poet_reactive_transport import PoetConfig, run_simulation
+
+    cfg = PoetConfig(nx=12, ny=24, n_steps=6, sig_digits=6, solver_iters=50)
+    ref = run_simulation(cfg, use_dht=False)
+    dht = run_simulation(cfg, use_dht=True)
+    # same advection field, chemistry equal within rounding-induced error
+    np.testing.assert_allclose(
+        np.asarray(dht["conc"]), np.asarray(ref["conc"]), rtol=2e-2, atol=1e-4)
+    assert dht["hit_rate"] > 0.3, "sharp front -> most cells unchanged -> hits"
+    assert dht["chem_calls"] < ref["chem_calls"]
+
+
+def test_poet_hit_rate_grows_with_rounding():
+    from examples.poet_reactive_transport import PoetConfig, run_simulation
+
+    coarse = run_simulation(
+        PoetConfig(nx=10, ny=20, n_steps=5, sig_digits=2, solver_iters=50),
+        use_dht=True)
+    fine = run_simulation(
+        PoetConfig(nx=10, ny=20, n_steps=5, sig_digits=7, solver_iters=50),
+        use_dht=True)
+    assert coarse["hit_rate"] >= fine["hit_rate"]
+
+
+def test_quickstart_runs():
+    from examples import quickstart
+
+    stats = quickstart.main(verbose=False)
+    assert stats["read_hits"] == stats["n_items"]
