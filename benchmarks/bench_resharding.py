@@ -1,0 +1,98 @@
+"""Elastic membership: online resharding throughput (DESIGN.md §5).
+
+The paper's table is sized once at DHT_create; this bench measures what
+the membership subsystem adds — migration throughput (entries/s moved
+through the routing/dht_write path) for grow (S -> 2S), shrink
+(2S -> S) and single-shard leave, plus read/write throughput on the
+resized table to show the elastic table serves at full speed afterwards.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import (
+    DHTConfig,
+    dht_create,
+    dht_read,
+    dht_resize,
+    dht_write,
+    ring_create,
+    shard_leave,
+)
+
+from .common import Row, make_keys_vals, time_fn
+
+
+def _filled(cfg, keys, vals):
+    st = dht_create(cfg, ring_create(cfg.n_shards))
+    st, ws = dht_write(st, keys, vals)
+    return st, int(ws["inserted"]) + int(ws["updated"]) + int(ws["evicted"])
+
+
+def _migration(fn, label, rows):
+    t0 = time.perf_counter()
+    st, ms = fn()
+    jax.block_until_ready(st.keys)
+    dt = time.perf_counter() - t0
+    moved = max(ms["moved"], 1)
+    rows.append(Row(
+        f"reshard/{label}",
+        dt / moved * 1e6,
+        f"moved={ms['moved']};live={ms['n_live']};"
+        f"entries_per_s={moved / dt:.0f};epoch={ms['epoch']}",
+    ))
+    return st
+
+
+def run(quick: bool = True):
+    rows = []
+    n = 4096 if quick else 32768
+    s = 8
+    cfg = DHTConfig(n_shards=s, buckets_per_shard=(1 << 12), capacity=n)
+    keys, vals = make_keys_vals(n, seed=3)
+    st, _ = _filled(cfg, keys, vals)
+    batch = 512 if quick else 2048
+
+    # grow S -> 2S (consistent hashing: ~half the live entries move)
+    st = _migration(lambda: dht_resize(st, 2 * s, batch=batch),
+                    f"grow/{s}to{2 * s}", rows)
+    # post-resize serving throughput on the grown table
+    read = jax.jit(lambda t, k: dht_read(t, k))
+    t_r, _ = time_fn(lambda: read(st, keys), iters=2)
+    rows.append(Row(f"reshard/post_grow_read", t_r / n * 1e6,
+                    f"measured_mops={n / t_r / 1e6:.3f}"))
+    write = jax.jit(lambda t, k, v: dht_write(t, k, v))
+    t_w, _ = time_fn(lambda: write(st, keys, vals), iters=2)
+    rows.append(Row(f"reshard/post_grow_write", t_w / n * 1e6,
+                    f"measured_mops={n / t_w / 1e6:.3f}"))
+
+    # shrink back 2S -> S
+    st = _migration(lambda: dht_resize(st, s, batch=batch),
+                    f"shrink/{2 * s}to{s}", rows)
+    t_r, _ = time_fn(lambda: read(st, keys), iters=2)
+    rows.append(Row(f"reshard/post_shrink_read", t_r / n * 1e6,
+                    f"measured_mops={n / t_r / 1e6:.3f}"))
+
+    # single-shard leave (failure/drain: ~1/S of the table moves)
+    st = _migration(lambda: shard_leave(st, s - 1, batch=batch),
+                    f"leave/1of{s}", rows)
+
+    # everything must still be servable: hit rate after the full cycle
+    st, _, found, rs = dht_read(st, keys)
+    rows.append(Row("reshard/survivor_hit_rate",
+                    0.0,
+                    f"hits={int(rs['hits'])};queries={n};"
+                    f"hit_fraction={float(np.mean(np.asarray(found))):.4f}"))
+    return rows
+
+
+def main(quick: bool = True):
+    for r in run(quick):
+        print(r.csv())
+
+
+if __name__ == "__main__":
+    main(False)

@@ -24,6 +24,7 @@ def main() -> None:
         bench_fig6_mixed,
         bench_fig7_poet,
         bench_kernels,
+        bench_resharding,
         bench_roofline,
         bench_table2_mismatch,
         bench_value_sizes,
@@ -37,6 +38,7 @@ def main() -> None:
         "fig7": bench_fig7_poet,
         "valsize": bench_value_sizes,
         "kernels": bench_kernels,
+        "reshard": bench_resharding,
         "roofline": bench_roofline,
     }
     selected = (args.only.split(",") if args.only else list(benches))

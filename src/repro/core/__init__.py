@@ -11,13 +11,36 @@ from .layout import (  # noqa: F401
     dht_free,
     occupancy,
 )
+from .layout import with_ring  # noqa: F401
 from .dht import (  # noqa: F401
     W_DROPPED,
     W_EVICT,
     W_INSERT,
     W_UPDATE,
     dht_read,
+    dht_read_dual,
     dht_write,
+)
+from .membership import (  # noqa: F401
+    RingState,
+    ring_create,
+    ring_join,
+    ring_leave,
+    ring_owner_of,
+    ring_resize,
+)
+from .migrate import (  # noqa: F401
+    Migration,
+    MigrationPlan,
+    adopt_ring,
+    dht_resize,
+    migration_begin,
+    migration_finish,
+    migration_read,
+    migration_step,
+    plan_migration,
+    shard_join,
+    shard_leave,
 )
 from .surrogate import (  # noqa: F401
     SurrogateConfig,

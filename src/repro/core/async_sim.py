@@ -78,10 +78,16 @@ class AsyncStats:
 
 
 class AsyncDHT:
-    """R concurrent ranks over one shared table, interleaved sub-ops."""
+    """R concurrent ranks over one shared table, interleaved sub-ops.
 
-    def __init__(self, cfg: DHTConfig, seed: int = 0):
+    ``ring`` (a ``core.membership.RingState``) switches owner selection
+    from static modulo to the consistent-hash ring — the async torn-read
+    phenomenology is placement-independent, so the simulator accepts
+    either, mirroring the JAX path."""
+
+    def __init__(self, cfg: DHTConfig, seed: int = 0, ring=None):
         self.cfg = cfg
+        self.ring = ring
         b = cfg.n_shards * cfg.buckets_per_shard
         self.keys = np.zeros((b, cfg.key_words), np.uint32)
         self.vals = np.zeros((b, cfg.val_words), np.uint32)
@@ -95,7 +101,12 @@ class AsyncDHT:
     # -- addressing (same scheme as the JAX path) --
     def _bucket_of(self, key: np.ndarray) -> int:
         h_hi, h_lo = hash64_np(key[None, :])
-        shard = int(h_hi[0]) % self.cfg.n_shards
+        if self.ring is not None:
+            from .membership import ring_owner_np
+
+            shard = int(ring_owner_np(self.ring, h_hi)[0])
+        else:
+            shard = int(h_hi[0]) % self.cfg.n_shards
         span = max(self.cfg.buckets_per_shard - self.cfg.n_probe + 1, 1)
         base = int(h_lo[0]) % span
         return shard * self.cfg.buckets_per_shard + base

@@ -1,0 +1,26 @@
+"""Version compatibility shims for the JAX API surface we depend on.
+
+``shard_map`` moved from ``jax.experimental.shard_map`` (kwarg
+``check_rep``) to ``jax.shard_map`` (kwarg ``check_vma``); we support
+both so the sharded DHT backend runs on the full range of jax versions
+the container images carry.
+"""
+from __future__ import annotations
+
+import jax
+
+try:  # jax >= 0.6: public API
+    _shard_map = jax.shard_map
+    _CHECK_KW = "check_vma"
+except AttributeError:  # jax <= 0.5: experimental API
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    _CHECK_KW = "check_rep"
+
+
+def shard_map(fn, *, mesh, in_specs, out_specs, check: bool = False):
+    """``jax.shard_map`` with replication checking toggled portably."""
+    return _shard_map(
+        fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        **{_CHECK_KW: check},
+    )

@@ -28,7 +28,14 @@ import jax
 import jax.numpy as jnp
 
 from . import routing
-from .hashing import base_bucket, checksum32, hash64, owner_shard, probe_indices
+from .hashing import (
+    base_bucket,
+    checksum32,
+    hash64,
+    owner_shard,
+    probe_indices,
+    ring_owner,
+)
 from .layout import (
     GEN_SHIFT,
     INVALID,
@@ -259,13 +266,23 @@ def _shard_read(cfg: DHTConfig, slab, base, keys, valid, axis_name):
 # public batched API
 # ---------------------------------------------------------------------------
 
-def _route(cfg: DHTConfig, keys: jnp.ndarray, axis_name):
+def _route(state: DHTState, keys: jnp.ndarray, axis_name):
+    """Owner placement: static modulo (paper) or consistent-hash ring
+    (elastic membership, DESIGN.md §4).  Ring presence is structural, so
+    jit traces specialize with zero overhead on the legacy path."""
+    cfg = state.cfg
     h_hi, h_lo = hash64(keys)
-    dest = owner_shard(h_hi, cfg.n_shards)
+    if state.ring is None:
+        dest = owner_shard(h_hi, cfg.n_shards)
+        epoch = jnp.int32(0)
+    else:
+        r = state.ring
+        dest = ring_owner(h_hi, r.positions, r.owners, r.n_live)
+        epoch = r.epoch
     base = base_bucket(h_lo, cfg.buckets_per_shard, cfg.n_probe)
     n = keys.shape[0]
     cap = cfg.capacity or routing.auto_capacity(n, cfg.n_shards)
-    binned = routing.bin_by_dest(dest, cfg.n_shards, cap)
+    binned = routing.bin_by_dest(dest, cfg.n_shards, cap, epoch=epoch)
     return binned, base
 
 
@@ -275,7 +292,8 @@ def _slab_of(state: DHTState):
 
 
 def _state_from(state: DHTState, slab) -> DHTState:
-    return DHTState(state.cfg, slab["keys"], slab["vals"], slab["meta"], slab["csum"])
+    return DHTState(state.cfg, slab["keys"], slab["vals"], slab["meta"],
+                    slab["csum"], state.ring)
 
 
 def dht_write(
@@ -295,7 +313,7 @@ def dht_write(
     cfg = state.cfg
     if valid is None:
         valid = jnp.ones((keys.shape[0],), bool)
-    binned, base = _route(cfg, keys, axis_name)
+    binned, base = _route(state, keys, axis_name)
     payload_valid = (valid & binned.kept).astype(jnp.int32)
     inc = routing.dispatch(
         binned,
@@ -327,6 +345,7 @@ def dht_write(
         "dropped": binned.n_dropped,
         "rounds": rounds.astype(jnp.int32),
         "lock_tokens": tok,
+        "epoch": binned.epoch,
         "code": code_back,
     }
     return _state_from(state, slab), stats
@@ -345,7 +364,7 @@ def dht_read(
     cfg = state.cfg
     if valid is None:
         valid = jnp.ones((keys.shape[0],), bool)
-    binned, base = _route(cfg, keys, axis_name)
+    binned, base = _route(state, keys, axis_name)
     payload_valid = (valid & binned.kept).astype(jnp.int32)
     inc = routing.dispatch(binned, [base, keys, payload_valid], axis_name)
     if axis_name is None:
@@ -375,14 +394,57 @@ def dht_read(
         "mismatches": n_mm,
         "dropped": binned.n_dropped,
         "lock_tokens": tok,
+        "epoch": binned.epoch,
     }
     return _state_from(state, slab), val_out, found_out, stats
+
+
+def dht_read_dual(
+    state: DHTState,
+    prev: DHTState,
+    keys: jnp.ndarray,
+    valid: jnp.ndarray | None = None,
+    *,
+    axis_name: Any = None,
+) -> tuple[DHTState, DHTState, jnp.ndarray, jnp.ndarray, dict[str, jnp.ndarray]]:
+    """Dual-epoch read during an online migration (DESIGN.md §5).
+
+    Between ``migration_begin`` and ``migration_finish`` an entry lives in
+    exactly one of two tables: the new-epoch table ``state`` (already moved,
+    or freshly written) or the previous-epoch table ``prev`` (not yet
+    moved).  Probe the new owners first, then fall back to the old owners
+    for the residual misses — a hit can therefore never be lost mid-move.
+
+    Returns ``(state', prev', vals, found, stats)``.
+    """
+    if valid is None:
+        valid = jnp.ones((keys.shape[0],), bool)
+    state, val_new, found_new, s_new = dht_read(
+        state, keys, valid, axis_name=axis_name
+    )
+    prev, val_old, found_old, s_old = dht_read(
+        prev, keys, valid & ~found_new, axis_name=axis_name
+    )
+    vals, found = routing.merge_dual_epoch(
+        found_new, val_new, found_old, val_old
+    )
+    stats = {
+        "hits": (s_new["hits"] + s_old["hits"]).astype(jnp.int32),
+        "misses": jnp.sum(valid & ~found).astype(jnp.int32),
+        "mismatches": s_new["mismatches"] + s_old["mismatches"],
+        "dropped": s_new["dropped"] + s_old["dropped"],
+        "lock_tokens": s_new["lock_tokens"] + s_old["lock_tokens"],
+        "epoch": s_new["epoch"],
+        "hits_old_epoch": s_old["hits"],
+    }
+    return state, prev, vals, found, stats
 
 
 __all__ = [
     "DHTConfig",
     "DHTState",
     "dht_read",
+    "dht_read_dual",
     "dht_write",
     "W_DROPPED",
     "W_INSERT",

@@ -13,9 +13,11 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from . import dht as dht_ops
+from .compat import shard_map
 from .layout import DHTConfig, DHTState, dht_create
 
 
@@ -33,11 +35,22 @@ def _psum_stats(stats: dict, axes) -> dict:
     for k, v in stats.items():
         if k == "code":
             out[k] = v  # per-item, stays sharded
-        elif k == "rounds":
-            out[k] = jax.lax.pmax(v, axes)
+        elif k in ("rounds", "epoch"):
+            out[k] = jax.lax.pmax(v, axes)  # replicated/uniform scalars
         else:
             out[k] = jax.lax.psum(v, axes)
     return out
+
+
+def _state_shardings(mesh: Mesh, template: DHTState):
+    """NamedShardings for a DHTState: slabs spread over the mesh, the
+    membership ring (if any) replicated on every device."""
+    spec = shard_spec(mesh)
+    sh = jax.tree.map(lambda _: NamedSharding(mesh, spec), template)
+    if template.ring is not None:
+        sh.ring = jax.tree.map(
+            lambda _: NamedSharding(mesh, P()), template.ring)
+    return sh
 
 
 @dataclasses.dataclass
@@ -49,74 +62,156 @@ class ShardedDHT:
     state: DHTState
 
     @classmethod
-    def create(cls, mesh: Mesh, cfg: DHTConfig) -> "ShardedDHT":
+    def create(cls, mesh: Mesh, cfg: DHTConfig, ring=None) -> "ShardedDHT":
         n_dev = mesh.devices.size
         assert cfg.n_shards == n_dev, (
             f"one shard per device: n_shards={cfg.n_shards} != mesh size {n_dev}"
         )
-        spec = shard_spec(mesh)
-        state = jax.jit(
-            dht_create,
-            static_argnums=0,
-            out_shardings=jax.tree.map(
-                lambda _: NamedSharding(mesh, spec), dht_create(cfg)
-            ),
-        )(cfg)
+        template = dht_create(cfg, ring)
+        state = jax.device_put(template, _state_shardings(mesh, template))
         return cls(mesh=mesh, cfg=cfg, state=state)
 
     # -- sharded ops ------------------------------------------------------
-    def _specs(self):
+    def _specs(self, state: DHTState | None = None):
+        state = self.state if state is None else state
         axes = mesh_axes(self.mesh)
         sspec = shard_spec(self.mesh)
-        state_spec = jax.tree.map(lambda _: sspec, self.state)
+        state_spec = jax.tree.map(lambda _: sspec, state)
+        if state.ring is not None:
+            state_spec.ring = jax.tree.map(lambda _: P(), state.ring)
         batch_spec = P(axes)
         return axes, state_spec, batch_spec
 
-    def write_fn(self):
-        axes, state_spec, batch_spec = self._specs()
+    def write_fn(self, state: DHTState | None = None):
+        axes, state_spec, batch_spec = self._specs(state)
 
-        def fn(state, keys, vals):
-            state, stats = dht_ops.dht_write(state, keys, vals, axis_name=axes)
+        def fn(state, keys, vals, valid):
+            state, stats = dht_ops.dht_write(
+                state, keys, vals, valid, axis_name=axes)
             return state, _psum_stats(stats, axes)
 
         stats_spec = {k: (batch_spec if k == "code" else P())
                       for k in ("inserted", "updated", "evicted", "dropped",
-                                "rounds", "lock_tokens", "code")}
+                                "rounds", "lock_tokens", "epoch", "code")}
         return jax.jit(
-            jax.shard_map(
+            shard_map(
                 fn, mesh=self.mesh,
-                in_specs=(state_spec, batch_spec, batch_spec),
+                in_specs=(state_spec, batch_spec, batch_spec, batch_spec),
                 out_specs=(state_spec, stats_spec),
-                check_vma=False,
             )
         )
 
-    def read_fn(self):
-        axes, state_spec, batch_spec = self._specs()
+    def read_fn(self, state: DHTState | None = None):
+        axes, state_spec, batch_spec = self._specs(state)
 
-        def fn(state, keys):
-            state, vals, found, stats = dht_ops.dht_read(state, keys, axis_name=axes)
+        def fn(state, keys, valid):
+            state, vals, found, stats = dht_ops.dht_read(
+                state, keys, valid, axis_name=axes)
             return state, vals, found, _psum_stats(stats, axes)
 
         stats_spec = {k: P() for k in
-                      ("hits", "misses", "mismatches", "dropped", "lock_tokens")}
+                      ("hits", "misses", "mismatches", "dropped",
+                       "lock_tokens", "epoch")}
         return jax.jit(
-            jax.shard_map(
+            shard_map(
                 fn, mesh=self.mesh,
-                in_specs=(state_spec, batch_spec),
+                in_specs=(state_spec, batch_spec, batch_spec),
                 out_specs=(state_spec, batch_spec, batch_spec, stats_spec),
-                check_vma=False,
             )
         )
 
+    def _ones(self, n: int):
+        return jax.device_put(
+            jnp.ones((n,), bool),
+            NamedSharding(self.mesh, P(mesh_axes(self.mesh))),
+        )
+
     # convenience stateful wrappers
-    def write(self, keys, vals):
-        self.state, stats = self.write_fn()(self.state, keys, vals)
+    def write(self, keys, vals, valid=None):
+        valid = self._ones(keys.shape[0]) if valid is None else valid
+        self.state, stats = self.write_fn()(self.state, keys, vals, valid)
         return stats
 
-    def read(self, keys):
-        self.state, vals, found, stats = self.read_fn()(self.state, keys)
+    def read(self, keys, valid=None):
+        valid = self._ones(keys.shape[0]) if valid is None else valid
+        self.state, vals, found, stats = self.read_fn()(self.state, keys, valid)
         return vals, found, stats
+
+    # -- elastic membership (DESIGN.md §4-5) ------------------------------
+    @property
+    def ring(self):
+        return self.state.ring
+
+    def apply_ring(self, new_ring, batch: int = 512) -> dict:
+        """Online in-place resharding to ``new_ring`` on the sharded
+        backend: owner-changed entries stream in bounded batches through
+        the shard_map/all_to_all ``dht_write`` path (extraction of the
+        source entries is host-side, like the paper's migration driver).
+        """
+        from . import migrate  # local import: migrate is backend-agnostic
+
+        n_dev = self.mesh.devices.size
+        batch = -(-batch // n_dev) * n_dev  # multiple of the mesh size
+        plan = migrate.plan_migration(self.state, new_ring, self.cfg)
+        assert plan.inplace, "sharded backend reshards in place (fixed mesh)"
+
+        # open the new epoch: same slabs, new ring, per-batch capacity
+        mig_cfg = dataclasses.replace(plan.mig_cfg, capacity=batch // n_dev)
+        new_state = DHTState(mig_cfg, self.state.keys, self.state.vals,
+                             self.state.meta, self.state.csum, new_ring)
+        new_state = jax.device_put(
+            new_state, _state_shardings(self.mesh, new_state))
+        wfn = self.write_fn(new_state)
+        rfn = self.read_fn(new_state)
+
+        kw, vw = self.cfg.key_words, self.cfg.val_words
+        src_keys = np.asarray(self.state.keys).reshape(-1, kw)
+        src_vals = np.asarray(self.state.vals).reshape(-1, vw)
+        bspec = NamedSharding(self.mesh, P(mesh_axes(self.mesh)))
+        moved = evicted = 0
+        for lo in range(0, plan.n_moved, batch):
+            idx = plan.src[lo:lo + batch]
+            n = int(idx.shape[0])
+            pad = np.zeros((batch,), np.int64)
+            pad[:n] = idx
+            keys = jax.device_put(jnp.asarray(src_keys[pad]), bspec)
+            vals = jax.device_put(jnp.asarray(src_vals[pad]), bspec)
+            valid = jax.device_put(
+                jnp.asarray(np.arange(batch) < n), bspec)
+            new_state, _, found, _ = rfn(new_state, keys, valid)
+            new_state, ws = wfn(new_state, keys, vals, valid & ~found)
+            assert int(ws["dropped"]) == 0
+            moved += int(jnp.sum(valid & ~found))
+            evicted += int(ws["evicted"])
+
+        # retire: reclaim source buckets whose stored key now lives
+        # elsewhere (shared invariant: migrate.stale_sources)
+        meta = np.array(new_state.meta)
+        csum = np.array(new_state.csum)
+        if plan.n_moved:
+            s_idx, b_idx, foreign = migrate.stale_sources(
+                new_state.keys, plan.src, new_ring,
+                self.cfg.buckets_per_shard)
+            meta[s_idx[foreign], b_idx[foreign]] = 0
+            csum[s_idx[foreign], b_idx[foreign]] = 0
+        final = DHTState(self.cfg, new_state.keys, new_state.vals,
+                         jnp.asarray(meta), jnp.asarray(csum), new_ring)
+        self.state = jax.device_put(final, _state_shardings(self.mesh, final))
+        return {"n_live": plan.n_live, "n_planned": plan.n_moved,
+                "moved": moved, "evicted_at_dest": evicted,
+                "epoch": int(new_ring.epoch)}
+
+    def leave(self, shard_id: int, batch: int = 512) -> dict:
+        from .membership import ring_create, ring_leave
+
+        ring = self.ring or ring_create(self.cfg.n_shards)
+        return self.apply_ring(ring_leave(ring, shard_id), batch)
+
+    def join(self, shard_id: int, batch: int = 512) -> dict:
+        from .membership import ring_join
+
+        assert self.ring is not None, "join needs a ring"
+        return self.apply_ring(ring_join(self.ring, shard_id), batch)
 
 
 def make_mesh_1d(n: int | None = None, name: str = "dht") -> Mesh:

@@ -76,6 +76,29 @@ def owner_shard(h_hi: jnp.ndarray, n_shards: int) -> jnp.ndarray:
     return (h_hi % jnp.uint32(n_shards)).astype(jnp.int32)
 
 
+def ring_owner(
+    h_hi: jnp.ndarray,
+    positions: jnp.ndarray,
+    owners: jnp.ndarray,
+    n_live: jnp.ndarray,
+) -> jnp.ndarray:
+    """Consistent-hash ring lookup: the successor virtual node owns the key.
+
+    Elastic replacement for :func:`owner_shard` (see DESIGN.md §4): with
+    virtual-node placement, adding/removing a shard relocates only the keys
+    whose successor vnode changed — ~1/S of the table instead of all of it
+    under modulo placement.
+
+    positions : (n_slots,) uint32, sorted ascending; dead slots hold the
+                0xFFFFFFFF sentinel and sort to the tail.
+    owners    : (n_slots,) int32 shard id per vnode (-1 for dead slots).
+    n_live    : () int32 number of live vnodes (prefix of ``positions``).
+    """
+    idx = jnp.searchsorted(positions, h_hi.astype(jnp.uint32), side="left")
+    idx = jnp.where(idx >= n_live, 0, idx).astype(jnp.int32)  # wrap the ring
+    return owners[idx].astype(jnp.int32)
+
+
 def base_bucket(h_lo: jnp.ndarray, n_buckets: int, n_probe: int) -> jnp.ndarray:
     """Start of the contiguous probe window.
 

@@ -61,23 +61,30 @@ class DHTConfig:
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class DHTState:
-    """The table itself. Leading dim S shards across all devices."""
+    """The table itself. Leading dim S shards across all devices.
+
+    ``ring`` is the optional elastic-membership consistent-hash ring
+    (``core/membership.RingState``).  ``None`` keeps the paper's static
+    ``hash % n_shards`` placement; a ring switches routing to successor-
+    vnode lookup and enables online resharding (``core/migrate.py``).
+    """
 
     cfg: DHTConfig
     keys: jnp.ndarray
     vals: jnp.ndarray
     meta: jnp.ndarray
     csum: jnp.ndarray
+    ring: Any = None
 
     def tree_flatten(self):
-        return (self.keys, self.vals, self.meta, self.csum), self.cfg
+        return (self.keys, self.vals, self.meta, self.csum, self.ring), self.cfg
 
     @classmethod
     def tree_unflatten(cls, cfg, children):
         return cls(cfg, *children)
 
 
-def dht_create(cfg: DHTConfig) -> DHTState:
+def dht_create(cfg: DHTConfig, ring: Any = None) -> DHTState:
     """DHT_create: allocate the empty table (paper §3.1 API)."""
     s, b = cfg.n_shards, cfg.buckets_per_shard
     return DHTState(
@@ -86,7 +93,14 @@ def dht_create(cfg: DHTConfig) -> DHTState:
         vals=jnp.zeros((s, b, cfg.val_words), jnp.uint32),
         meta=jnp.zeros((s, b), jnp.uint32),
         csum=jnp.zeros((s, b), jnp.uint32),
+        ring=ring,
     )
+
+
+def with_ring(state: DHTState, ring: Any) -> DHTState:
+    """Attach/replace the membership ring without touching the slabs."""
+    return DHTState(state.cfg, state.keys, state.vals, state.meta,
+                    state.csum, ring)
 
 
 def dht_free(state: DHTState) -> None:

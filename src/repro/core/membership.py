@@ -1,0 +1,178 @@
+"""Elastic membership for the sharded DHT: a consistent-hash ring.
+
+The paper's table is fixed-size for the lifetime of the run — the owner
+rank is ``hash % nprocs`` chosen at ``DHT_create``.  This module replaces
+that static modulo with a **consistent-hash ring** (Chord-style, see
+DESIGN.md §4): each shard projects ``n_virtual`` virtual nodes onto a
+32-bit ring; a key is owned by the shard of the successor vnode of its
+hash.  Membership changes (join / leave / resize) then relocate only the
+keys whose successor vnode changed — O(moved/S) of the table instead of
+nearly all of it — which is what makes *online* resharding
+(``core/migrate.py``) affordable.
+
+``RingState`` is a small pytree that rides inside ``DHTState``: the
+sorted vnode arrays are rebuilt eagerly on the host whenever membership
+changes (rare), while the jitted read/write hot path only performs one
+``searchsorted`` per key (:func:`repro.core.hashing.ring_owner`).  Every
+membership change bumps ``epoch``; routing stamps the epoch into its
+stats so mid-migration traffic is attributable to an epoch
+(DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .hashing import murmur32_words, ring_owner
+
+# seed for vnode placement — independent from the key-hash seeds
+SEED_RING = 0x7F4A7C15
+
+# dead ring slots sort past every real position
+DEAD_POSITION = np.uint32(0xFFFFFFFF)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class RingState:
+    """Consistent-hash ring: placement + liveness + epoch.
+
+    positions : (n_slots,) uint32  sorted vnode ring positions (dead = tail)
+    owners    : (n_slots,) int32   shard id of each vnode (-1 = dead slot)
+    alive     : (S,) bool          per-shard liveness
+    n_live    : ()  int32          live vnode count (prefix of positions)
+    epoch     : ()  int32          bumped on every membership change
+    """
+
+    positions: jnp.ndarray
+    owners: jnp.ndarray
+    alive: jnp.ndarray
+    n_live: jnp.ndarray
+    epoch: jnp.ndarray
+    n_virtual: int = 64
+
+    def tree_flatten(self):
+        return (
+            (self.positions, self.owners, self.alive, self.n_live, self.epoch),
+            self.n_virtual,
+        )
+
+    @classmethod
+    def tree_unflatten(cls, n_virtual, children):
+        return cls(*children, n_virtual=n_virtual)
+
+    @property
+    def n_shards(self) -> int:
+        return self.alive.shape[0]
+
+
+def _vnode_positions(n_shards: int, n_virtual: int) -> np.ndarray:
+    """(S, V) uint32 ring position of vnode (shard, replica)."""
+    s = np.arange(n_shards, dtype=np.uint32)[:, None]
+    r = np.arange(n_virtual, dtype=np.uint32)[None, :]
+    words = jnp.stack(
+        [
+            jnp.broadcast_to(jnp.asarray(s), (n_shards, n_virtual)),
+            jnp.broadcast_to(jnp.asarray(r), (n_shards, n_virtual)),
+        ],
+        axis=-1,
+    )
+    return np.asarray(murmur32_words(words, SEED_RING))
+
+
+def _rebuild(alive: np.ndarray, n_virtual: int, epoch: int) -> RingState:
+    """Host-side ring construction: sort live vnodes, sentinel-pad dead."""
+    n_shards = int(alive.shape[0])
+    assert alive.any(), "ring needs at least one live shard"
+    pos = _vnode_positions(n_shards, n_virtual)            # (S, V)
+    own = np.broadcast_to(
+        np.arange(n_shards, dtype=np.int32)[:, None], pos.shape
+    ).copy()
+    dead = ~alive[:, None]
+    pos = np.where(dead, DEAD_POSITION, pos).reshape(-1)
+    own = np.where(dead, np.int32(-1), own).reshape(-1)
+    # stable sort: dead sentinels land at the tail
+    order = np.argsort(pos, kind="stable")
+    pos, own = pos[order], own[order]
+    n_live = int(alive.sum()) * n_virtual
+    return RingState(
+        positions=jnp.asarray(pos, jnp.uint32),
+        owners=jnp.asarray(own, jnp.int32),
+        alive=jnp.asarray(alive, bool),
+        n_live=jnp.int32(n_live),
+        epoch=jnp.int32(epoch),
+        n_virtual=n_virtual,
+    )
+
+
+def ring_create(
+    n_shards: int,
+    n_virtual: int = 64,
+    alive: np.ndarray | None = None,
+) -> RingState:
+    """Fresh ring at epoch 0; all shards live unless ``alive`` says otherwise."""
+    if alive is None:
+        alive = np.ones((n_shards,), bool)
+    return _rebuild(np.asarray(alive, bool), n_virtual, epoch=0)
+
+
+def ring_owner_of(ring: RingState, h_hi: jnp.ndarray) -> jnp.ndarray:
+    """Owner shard of each key hash under this ring."""
+    return ring_owner(h_hi, ring.positions, ring.owners, ring.n_live)
+
+
+def ring_leave(ring: RingState, shard_id: int) -> RingState:
+    """Shard departs (graceful leave or declared failure): epoch + 1."""
+    alive = np.asarray(ring.alive).copy()
+    assert alive[shard_id], f"shard {shard_id} is not live"
+    alive[shard_id] = False
+    return _rebuild(alive, ring.n_virtual, epoch=int(ring.epoch) + 1)
+
+
+def ring_join(ring: RingState, shard_id: int) -> RingState:
+    """Shard (re)joins: epoch + 1."""
+    alive = np.asarray(ring.alive).copy()
+    assert not alive[shard_id], f"shard {shard_id} is already live"
+    alive[shard_id] = True
+    return _rebuild(alive, ring.n_virtual, epoch=int(ring.epoch) + 1)
+
+
+def ring_resize(ring: RingState, new_n_shards: int) -> RingState:
+    """Ring for a grown/shrunk shard set (all live): epoch + 1.
+
+    Keeps ``n_virtual``; vnode positions of surviving shards are identical
+    (they hash only (shard, replica)), so growth moves only the keys
+    captured by the new shards' vnodes.
+    """
+    alive = np.ones((new_n_shards,), bool)
+    return _rebuild(alive, ring.n_virtual, epoch=int(ring.epoch) + 1)
+
+
+def live_shards(ring: RingState) -> np.ndarray:
+    """Host-side live shard ids."""
+    return np.nonzero(np.asarray(ring.alive))[0]
+
+
+def ring_owner_np(ring: RingState, h_hi: np.ndarray) -> np.ndarray:
+    """numpy twin of :func:`ring_owner_of` for host-side planners/simulators."""
+    pos = np.asarray(ring.positions)
+    own = np.asarray(ring.owners)
+    n_live = int(ring.n_live)
+    idx = np.searchsorted(pos, h_hi.astype(np.uint32), side="left")
+    idx = np.where(idx >= n_live, 0, idx)
+    return own[idx].astype(np.int32)
+
+
+__all__ = [
+    "RingState",
+    "ring_create",
+    "ring_join",
+    "ring_leave",
+    "ring_owner_np",
+    "ring_owner_of",
+    "ring_resize",
+    "live_shards",
+]

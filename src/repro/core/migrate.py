@@ -1,0 +1,367 @@
+"""Online resharding: plan and execute live-entry migration between
+membership epochs (DESIGN.md §5).
+
+The paper's table can neither grow, shrink, nor survive a rank leaving.
+This module adds that capability on top of the consistent-hash ring
+(``core/membership.py``):
+
+- :func:`plan_migration` hashes every occupied bucket and determines which
+  entries change owner under a proposed new ring — with vnode placement
+  that is only ~1/S of the table per membership change.
+- :func:`migration_begin` / :func:`migration_step` / :func:`migration_finish`
+  stream the moved entries in bounded batches through the *existing*
+  ``routing.dispatch``/``dht_write`` data path, so migration traffic obeys
+  the same capacity/overflow discipline as queries.  Each step first
+  re-reads its batch from the new epoch (a moved key that was re-written
+  by the application mid-migration must not be clobbered by its stale
+  copy), then inserts the remainder.
+- Reads issued *between* begin and finish go through
+  :func:`repro.core.dht.dht_read_dual`: new owners first, previous-epoch
+  owners for the residual misses — an in-flight entry is always visible.
+- :func:`migration_finish` retires the old placement: stale source buckets
+  are reclaimed (only where the stored key still belongs elsewhere — a
+  fresh same-bucket write is preserved) and, on shrink, the evacuated
+  slab rows are freed.
+
+Conveniences: :func:`dht_resize` (S -> S' shards), :func:`shard_leave`,
+:func:`shard_join`, :func:`adopt_ring` (modulo -> ring placement).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from .dht import dht_read, dht_read_dual, dht_write
+from .hashing import hash64
+from .layout import INVALID, OCCUPIED, DHTConfig, DHTState, dht_create, dht_free
+from .membership import (
+    RingState,
+    ring_create,
+    ring_join,
+    ring_leave,
+    ring_owner_np,
+    ring_resize,
+)
+
+DEFAULT_BATCH = 256
+
+
+def _live_mask_np(state: DHTState) -> np.ndarray:
+    m = np.asarray(state.meta)
+    return ((m & OCCUPIED) != 0) & ((m & INVALID) == 0)
+
+
+def _owners_np(state: DHTState, ring: RingState) -> np.ndarray:
+    """(S, B) new owner of every stored key (garbage for empty buckets)."""
+    s, b, kw = state.keys.shape
+    h_hi, _ = hash64(jnp.reshape(state.keys, (s * b, kw)))
+    return ring_owner_np(ring, np.asarray(h_hi)).reshape(s, b)
+
+
+@dataclasses.dataclass(frozen=True)
+class MigrationPlan:
+    """Which occupied buckets must move, and into what table geometry."""
+
+    new_cfg: DHTConfig      # cfg of the table after migration_finish
+    mig_cfg: DHTConfig      # cfg during migration (slab rows = shard union)
+    new_ring: RingState
+    src: np.ndarray         # (M,) flat src bucket ids (shard * B + bucket)
+    inplace: bool           # True: carry slabs, move only `src`
+    n_live: int             # live entries before migration
+
+    @property
+    def n_moved(self) -> int:
+        return int(self.src.shape[0])
+
+
+def plan_migration(
+    state: DHTState,
+    new_ring: RingState,
+    new_cfg: DHTConfig | None = None,
+) -> MigrationPlan:
+    """Decide the migration strategy and enumerate the entries to move.
+
+    Same bucket geometry (B, n_probe, word widths) -> **in-place**: the
+    slabs are carried over (rows = union of old and new shard sets) and
+    only owner-changed entries move.  Different geometry -> **rebuild**:
+    a fresh table is allocated and every live entry re-inserts.
+    """
+    cfg = state.cfg
+    if new_cfg is None:
+        new_cfg = dataclasses.replace(cfg, n_shards=new_ring.n_shards)
+    assert new_cfg.n_shards == new_ring.n_shards, (
+        new_cfg.n_shards, new_ring.n_shards)
+    inplace = (
+        new_cfg.buckets_per_shard == cfg.buckets_per_shard
+        and new_cfg.n_probe == cfg.n_probe
+        and new_cfg.key_words == cfg.key_words
+        and new_cfg.val_words == cfg.val_words
+    )
+    live = _live_mask_np(state)
+    if inplace:
+        new_owner = _owners_np(state, new_ring)
+        row = np.arange(cfg.n_shards, dtype=np.int32)[:, None]
+        move = live & (new_owner != row)
+        mig_rows = max(cfg.n_shards, new_cfg.n_shards)
+    else:
+        move = live
+        mig_rows = new_cfg.n_shards
+    # migration-time cfg: row union so old rows stay addressable as
+    # sources; application traffic keeps its own routing capacity.
+    mig_cfg = dataclasses.replace(new_cfg, n_shards=mig_rows)
+    return MigrationPlan(
+        new_cfg=new_cfg,
+        mig_cfg=mig_cfg,
+        new_ring=new_ring,
+        src=np.nonzero(move.reshape(-1))[0].astype(np.int64),
+        inplace=inplace,
+        n_live=int(live.sum()),
+    )
+
+
+@dataclasses.dataclass
+class Migration:
+    """An in-flight resharding: old epoch (read-only) + new epoch (filling)."""
+
+    plan: MigrationPlan
+    old: DHTState           # previous epoch, previous ring — dual-read fallback
+    new: DHTState           # new epoch being populated
+    batch: int = DEFAULT_BATCH
+    cursor: int = 0         # next index into plan.src
+    moved: int = 0          # entries actually inserted into the new epoch
+    skipped: int = 0        # stale copies superseded by mid-migration writes
+    evicted: int = 0        # resident entries displaced at the destination
+
+    @property
+    def done(self) -> bool:
+        return self.cursor >= self.plan.n_moved
+
+
+def _pad_rows(x: jnp.ndarray, rows: int) -> jnp.ndarray:
+    if x.shape[0] == rows:
+        return x
+    pad = [(0, rows - x.shape[0])] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x, pad)
+
+
+def migration_begin(
+    state: DHTState,
+    new_ring: RingState,
+    new_cfg: DHTConfig | None = None,
+    batch: int = DEFAULT_BATCH,
+) -> Migration:
+    """Open the new epoch.  ``state`` is frozen as the dual-read fallback."""
+    plan = plan_migration(state, new_ring, new_cfg)
+    if plan.inplace:
+        rows = plan.mig_cfg.n_shards
+        new = DHTState(
+            plan.mig_cfg,
+            _pad_rows(state.keys, rows),
+            _pad_rows(state.vals, rows),
+            _pad_rows(state.meta, rows),
+            _pad_rows(state.csum, rows),
+            new_ring,
+        )
+    else:
+        new = dht_create(plan.mig_cfg, new_ring)
+    return Migration(plan=plan, old=state, new=new, batch=batch)
+
+
+def migration_step(mig: Migration) -> tuple[Migration, dict[str, int]]:
+    """Move one bounded batch through the regular dispatch/write path."""
+    plan = mig.plan
+    if mig.done:
+        return mig, {"moved": 0, "skipped": 0, "remaining": 0}
+    lo = mig.cursor
+    hi = min(lo + mig.batch, plan.n_moved)
+    idx = plan.src[lo:hi]
+    n = int(idx.shape[0])
+    pad = np.zeros((mig.batch,), np.int64)
+    pad[:n] = idx
+    valid = jnp.asarray(np.arange(mig.batch) < n)
+
+    old = mig.old
+    kw, vw = old.cfg.key_words, old.cfg.val_words
+    keys = jnp.reshape(old.keys, (-1, kw))[pad]
+    vals = jnp.reshape(old.vals, (-1, vw))[pad]
+
+    # migration traffic gets routing capacity == batch so it can never
+    # drop, without narrowing the capacity of concurrent app traffic
+    cfg_step = dataclasses.replace(mig.new.cfg, capacity=mig.batch)
+    st = DHTState(cfg_step, mig.new.keys, mig.new.vals, mig.new.meta,
+                  mig.new.csum, mig.new.ring)
+    # guard: keys already (re)written in the new epoch win over stale copies
+    st, _, found, _ = dht_read(st, keys, valid)
+    st, ws = dht_write(st, keys, vals, valid & ~found)
+    assert int(ws["dropped"]) == 0, "migration write overflowed capacity"
+
+    mig.new = DHTState(mig.new.cfg, st.keys, st.vals, st.meta, st.csum,
+                       st.ring)
+    mig.cursor = hi
+    stepped = int(jnp.sum(valid & ~found))
+    skipped = int(jnp.sum(valid & found))
+    evicted = int(ws["evicted"])
+    mig.moved += stepped
+    mig.skipped += skipped
+    mig.evicted += evicted
+    return mig, {
+        "moved": stepped,
+        "skipped": skipped,
+        "evicted": evicted,
+        "remaining": plan.n_moved - mig.cursor,
+    }
+
+
+def migration_read(mig: Migration, keys: jnp.ndarray, valid=None):
+    """Dual-epoch read while the migration is in flight."""
+    new, old, vals, found, stats = dht_read_dual(mig.new, mig.old, keys, valid)
+    mig.new, mig.old = new, old
+    return mig, vals, found, stats
+
+
+def stale_sources(
+    keys: jnp.ndarray, src: np.ndarray, new_ring: RingState,
+    buckets_per_shard: int,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """The retire invariant, shared by both backends: of the planned source
+    buckets, reclaim only those whose *currently stored* key still belongs
+    to another shard — a bucket re-acquired by a fresh write (same (row,
+    bucket), key owned here) must survive the retire.
+
+    keys: (S, B, KW) slab of the new epoch.  Returns host-side
+    (shard_idx, bucket_idx, foreign_mask) over ``src``.
+    """
+    s_idx = (src // buckets_per_shard).astype(np.int32)
+    b_idx = (src % buckets_per_shard).astype(np.int32)
+    kw = keys.shape[-1]
+    stored = jnp.reshape(keys, (-1, kw))[src]                 # (M, KW)
+    h_hi, _ = hash64(stored)
+    foreign = ring_owner_np(new_ring, np.asarray(h_hi)) != s_idx
+    return s_idx, b_idx, foreign
+
+
+def migration_finish(mig: Migration) -> tuple[DHTState, dict[str, int]]:
+    """Retire the previous epoch: reclaim stale source buckets, shrink the
+    slab to the new shard set, restore the application cfg."""
+    assert mig.done, f"{mig.plan.n_moved - mig.cursor} entries still in flight"
+    plan = mig.plan
+    new = mig.new
+    if plan.inplace and plan.n_moved:
+        s_idx, b_idx, foreign = stale_sources(
+            new.keys, plan.src, plan.new_ring, plan.new_cfg.buckets_per_shard)
+        rs = jnp.where(jnp.asarray(foreign), jnp.asarray(s_idx),
+                       jnp.int32(new.meta.shape[0]))
+        b_idx = jnp.asarray(b_idx)
+        meta = new.meta.at[rs, b_idx].set(jnp.uint32(0), mode="drop")
+        csum = new.csum.at[rs, b_idx].set(jnp.uint32(0), mode="drop")
+        new = DHTState(new.cfg, new.keys, new.vals, meta, csum, new.ring)
+    rows = plan.new_cfg.n_shards
+    final = DHTState(
+        plan.new_cfg,
+        new.keys[:rows],
+        new.vals[:rows],
+        new.meta[:rows],
+        new.csum[:rows],
+        plan.new_ring,
+    )
+    dht_free(mig.old)
+    stats = {
+        "n_live": plan.n_live,
+        "n_planned": plan.n_moved,
+        "moved": mig.moved,
+        "skipped": mig.skipped,
+        # resident entries displaced by migration inserts at near-full
+        # destination windows — nonzero means the move was lossy and the
+        # table should be resized with more headroom (cache semantics:
+        # a displaced entry degrades to a miss, never an error)
+        "evicted_at_dest": mig.evicted,
+        "epoch": int(plan.new_ring.epoch),
+        "inplace": int(plan.inplace),
+    }
+    return final, stats
+
+
+def _run(mig: Migration) -> tuple[DHTState, dict[str, int]]:
+    while not mig.done:
+        mig, _ = migration_step(mig)
+    return migration_finish(mig)
+
+
+def _ring_of(state: DHTState, n_virtual: int = 64) -> RingState:
+    if state.ring is not None:
+        return state.ring
+    # adopt: a ring over the current shard set (placement changes — the
+    # migration machinery relocates whatever the ring disagrees about)
+    return ring_create(state.cfg.n_shards, n_virtual)
+
+
+def dht_resize(
+    state: DHTState,
+    new_n_shards: int,
+    *,
+    buckets_per_shard: int | None = None,
+    batch: int = DEFAULT_BATCH,
+) -> tuple[DHTState, dict[str, int]]:
+    """Grow or shrink the table to ``new_n_shards`` shards, online.
+
+    Every live (occupied, non-INVALID) entry survives; with unchanged
+    bucket geometry only the owner-changed fraction (~|S'-S|/max(S,S'))
+    actually moves.
+    """
+    ring = _ring_of(state)
+    new_ring = ring_resize(ring, new_n_shards)
+    new_cfg = dataclasses.replace(
+        state.cfg,
+        n_shards=new_n_shards,
+        buckets_per_shard=buckets_per_shard or state.cfg.buckets_per_shard,
+    )
+    return _run(migration_begin(state, new_ring, new_cfg, batch))
+
+
+def adopt_ring(
+    state: DHTState, n_virtual: int = 64, batch: int = DEFAULT_BATCH
+) -> tuple[DHTState, dict[str, int]]:
+    """Migrate a legacy modulo-placed table onto ring placement."""
+    assert state.ring is None, "table already has a ring"
+    new_ring = ring_create(state.cfg.n_shards, n_virtual)
+    return _run(migration_begin(state, new_ring, state.cfg, batch))
+
+
+def shard_leave(
+    state: DHTState, shard_id: int, *, batch: int = DEFAULT_BATCH
+) -> tuple[DHTState, dict[str, int]]:
+    """Evacuate one shard and remove it from the ring (graceful leave /
+    declared failure).  Slab rows are kept (the row goes cold); only the
+    leaver's entries move — the consistent-hashing guarantee."""
+    ring = _ring_of(state)
+    return _run(migration_begin(state, ring_leave(ring, shard_id), state.cfg, batch))
+
+
+def shard_join(
+    state: DHTState, shard_id: int, *, batch: int = DEFAULT_BATCH
+) -> tuple[DHTState, dict[str, int]]:
+    """Bring a (previously left) shard back: it re-captures its vnode arcs
+    and the corresponding entries migrate in."""
+    ring = _ring_of(state)
+    if state.ring is None:
+        raise ValueError("shard_join needs a ring; call adopt_ring first")
+    return _run(migration_begin(state, ring_join(ring, shard_id), state.cfg, batch))
+
+
+__all__ = [
+    "DEFAULT_BATCH",
+    "Migration",
+    "MigrationPlan",
+    "stale_sources",
+    "adopt_ring",
+    "dht_resize",
+    "migration_begin",
+    "migration_finish",
+    "migration_read",
+    "migration_step",
+    "plan_migration",
+    "shard_join",
+    "shard_leave",
+]

@@ -30,7 +30,13 @@ import jax.numpy as jnp
 
 @dataclasses.dataclass
 class Binned:
-    """Result of binning a local query batch by destination."""
+    """Result of binning a local query batch by destination.
+
+    ``epoch`` stamps which membership epoch the destinations were computed
+    under (0 for the static modulo placement).  During an online migration
+    two epochs are in flight; the stamp lets stats and debugging traffic
+    attribute every dispatched batch to its routing generation
+    (DESIGN.md §5)."""
 
     pos: jnp.ndarray      # (n,) position of each item within its dest bin
     kept: jnp.ndarray     # (n,) bool — False = overflowed capacity
@@ -38,9 +44,12 @@ class Binned:
     capacity: int
     n_dest: int
     n_dropped: jnp.ndarray  # () int32
+    epoch: jnp.ndarray = 0  # () int32 membership epoch of `dest`
 
 
-def bin_by_dest(dest: jnp.ndarray, n_dest: int, capacity: int) -> Binned:
+def bin_by_dest(
+    dest: jnp.ndarray, n_dest: int, capacity: int, epoch=None
+) -> Binned:
     """Compute within-bin positions with a stable order (item index)."""
     n = dest.shape[0]
     onehot = (dest[:, None] == jnp.arange(n_dest, dtype=dest.dtype)[None, :])
@@ -55,6 +64,7 @@ def bin_by_dest(dest: jnp.ndarray, n_dest: int, capacity: int) -> Binned:
         capacity=capacity,
         n_dest=n_dest,
         n_dropped=jnp.sum(~kept).astype(jnp.int32),
+        epoch=jnp.int32(0) if epoch is None else jnp.asarray(epoch, jnp.int32),
     )
 
 
@@ -121,6 +131,21 @@ def collect(
             ).reshape((-1,) + p.shape[1:])
         out.append(_gather_from_bins(b, buf, fill))
     return out
+
+
+def merge_dual_epoch(
+    found_new: jnp.ndarray,
+    vals_new: jnp.ndarray,
+    found_old: jnp.ndarray,
+    vals_old: jnp.ndarray,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Combine the replies of a dual-epoch read: the new-epoch owner is
+    authoritative (it sees post-migration writes); the old-epoch owner
+    backfills entries still in flight."""
+    found = found_new | found_old
+    vals = jnp.where(found_new[:, None], vals_new, vals_old)
+    vals = jnp.where(found[:, None], vals, jnp.zeros_like(vals))
+    return vals, found
 
 
 def auto_capacity(n_local: int, n_dest: int, factor: float = 4.0, floor: int = 16) -> int:

@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from . import dht as dht_ops
+from . import membership, migrate
 from .layout import DHTConfig, DHTState, dht_create, pack_floats, unpack_floats
 
 
@@ -45,8 +46,27 @@ class SurrogateConfig:
         assert self.dht.val_words >= 2 * self.n_outputs
 
 
-def surrogate_create(cfg: SurrogateConfig) -> DHTState:
-    return dht_create(cfg.dht)
+def surrogate_create(
+    cfg: SurrogateConfig, *, elastic: bool = False, n_virtual: int = 64
+) -> DHTState:
+    """``elastic=True`` places entries on a consistent-hash ring so the
+    cache can later be resized/rebalanced online (see :func:`resize`)."""
+    ring = (membership.ring_create(cfg.dht.n_shards, n_virtual)
+            if elastic else None)
+    return dht_create(cfg.dht, ring)
+
+
+def resize(
+    cfg: SurrogateConfig, state: DHTState, new_n_shards: int,
+    *, batch: int = migrate.DEFAULT_BATCH,
+) -> tuple[SurrogateConfig, DHTState, dict]:
+    """Grow/shrink the cache online; cached results survive the move.
+
+    POET's occupancy climbs monotonically over a run — resizing before
+    evictions start destroying surrogate hits is exactly the elastic
+    workload DESIGN.md §5 targets.  Returns (cfg', state', stats)."""
+    state, stats = migrate.dht_resize(state, new_n_shards, batch=batch)
+    return dataclasses.replace(cfg, dht=state.cfg), state, stats
 
 
 def make_keys(cfg: SurrogateConfig, inputs: jnp.ndarray) -> jnp.ndarray:
@@ -55,10 +75,19 @@ def make_keys(cfg: SurrogateConfig, inputs: jnp.ndarray) -> jnp.ndarray:
     return pack_floats(rounded, cfg.dht.key_words)
 
 
-def lookup(cfg: SurrogateConfig, state: DHTState, inputs: jnp.ndarray, *, axis_name=None):
-    """Query the cache. Returns (state', outputs, found, stats)."""
+def lookup(cfg: SurrogateConfig, state: DHTState, inputs: jnp.ndarray, *,
+           prev: DHTState | None = None, axis_name=None):
+    """Query the cache. Returns (state', outputs, found, stats).
+
+    ``prev`` (the previous-epoch table of an in-flight migration) enables
+    the dual-epoch read path: entries still moving remain visible."""
     keys = make_keys(cfg, inputs)
-    state, val_words, found, stats = dht_ops.dht_read(state, keys, axis_name=axis_name)
+    if prev is None:
+        state, val_words, found, stats = dht_ops.dht_read(
+            state, keys, axis_name=axis_name)
+    else:
+        state, _prev, val_words, found, stats = dht_ops.dht_read_dual(
+            state, prev, keys, axis_name=axis_name)
     outputs = unpack_floats(val_words, cfg.n_outputs)
     return state, outputs, found, stats
 

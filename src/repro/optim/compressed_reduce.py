@@ -22,6 +22,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core.compat import shard_map
+
 
 def _quant(x: jnp.ndarray):
     """x: (R, C) -> int8 (R, C), scales (R, 1)."""
@@ -55,11 +57,10 @@ def make_compressed_reduce(mesh: Mesh, axis: str, n: int):
         shard_mean = jnp.sum(_dequant(q_t, s_t), axis=0) / r   # (chunk,)
         return shard_mean
 
-    fn = jax.shard_map(
+    fn = shard_map(
         local, mesh=mesh,
         in_specs=P(axis, None),
         out_specs=P(axis),       # reduce-scattered result
-        check_vma=False,
     )
     return jax.jit(fn)
 

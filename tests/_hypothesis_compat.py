@@ -1,0 +1,77 @@
+"""Degrade gracefully when ``hypothesis`` is not installed.
+
+The tier-1 suite must *collect and run* in minimal containers (the CI
+image has only jax + pytest).  When hypothesis is available we re-export
+it untouched; otherwise ``@given`` runs each property over a small fixed
+grid of deterministic examples — weaker than real property-based
+testing, but it keeps every invariant exercised instead of crashing
+collection with ``ModuleNotFoundError``.
+
+Usage in tests::
+
+    from _hypothesis_compat import given, settings, st
+"""
+from __future__ import annotations
+
+import itertools
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        """A fixed list of examples standing in for a search strategy."""
+
+        def __init__(self, values):
+            self.values = list(values)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value=0, max_value=2**31 - 1):
+            lo, hi = int(min_value), int(max_value)
+            mid = lo + (hi - lo) // 2
+            vals = [lo, hi, mid, lo + (hi - lo) // 3]
+            # dedupe, keep order
+            return _Strategy(dict.fromkeys(vals))
+
+        @staticmethod
+        def sampled_from(elements):
+            return _Strategy(elements)
+
+        @staticmethod
+        def booleans():
+            return _Strategy([False, True])
+
+    st = _Strategies()
+
+    def settings(*_args, **_kwargs):
+        """No-op replacement for ``hypothesis.settings``."""
+
+        def deco(fn):
+            return fn
+
+        return deco
+
+    def given(*strategies, _max_combos: int = 6):
+        """Run the test over a deterministic sample of the example grid."""
+
+        def deco(fn):
+            # NB: no functools.wraps — copying fn's signature would make
+            # pytest treat the example parameters as fixtures.
+            def wrapper():
+                grid = itertools.product(*[s.values for s in strategies])
+                for combo in itertools.islice(grid, _max_combos):
+                    fn(*combo)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+
+        return deco
+
+
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]

@@ -4,16 +4,24 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (
     DHTConfig,
+    W_EVICT,
+    W_INSERT,
     dht_create,
     dht_read,
     dht_write,
     occupancy,
 )
-from repro.core.layout import INVALID, MODES, OCCUPIED
+from repro.core.layout import (
+    INVALID,
+    MODES,
+    OCCUPIED,
+    pack_floats,
+    unpack_floats,
+)
 
 KW, VW = 20, 26
 
@@ -145,6 +153,75 @@ def test_property_modes_agree_on_final_state(seed, mode_):
     st_, _ = dht_write(st_, keys, vals)
     st_, out, found, _ = dht_read(st_, keys)
     assert bool(found.all()) and bool((out == vals).all())
+
+
+def test_invalid_bucket_reclaim_is_insert_and_excluded_from_occupancy():
+    """Paper §4.2: a bucket flagged INVALID by a lock-free reader is a
+    *writable* slot — a later write must reclaim it as W_INSERT (not evict
+    a live neighbour), and occupancy() must not count it."""
+    # one shard, window == table: every key probes the same 8 buckets
+    cfg = DHTConfig(n_shards=1, buckets_per_shard=8, n_probe=8,
+                    mode="lockfree")
+    st_ = dht_create(cfg)
+    keys, vals = _kv(8)
+    st_, ws = dht_write(st_, keys, vals)
+    assert int(ws["inserted"]) == 8 and float(occupancy(st_)[0]) == 1.0
+
+    # window is full: one more distinct key can only evict
+    extra_k, extra_v = _kv(2, seed=7)
+    st_, ws = dht_write(st_, extra_k[:1], extra_v[:1])
+    assert int(np.asarray(ws["code"])[0]) == W_EVICT
+
+    # corrupt one bucket; reading its key flags it INVALID
+    victim = 3
+    st_.csum = st_.csum.at[0, victim].set(st_.csum[0, victim] ^ jnp.uint32(1))
+    vkey = st_.keys[0, victim][None]
+    st_, _, found, rs = dht_read(st_, vkey)
+    assert not bool(found.any()) and int(rs["mismatches"]) == 1
+    assert int(np.asarray(st_.meta)[0, victim]) & INVALID
+    assert float(occupancy(st_)[0]) == 7 / 8, \
+        "occupancy must exclude INVALID buckets"
+
+    # a new key reclaims the INVALID slot: W_INSERT, not W_EVICT
+    st_, ws = dht_write(st_, extra_k[1:], extra_v[1:])
+    assert int(np.asarray(ws["code"])[0]) == W_INSERT
+    meta = int(np.asarray(st_.meta)[0, victim])
+    assert (meta & OCCUPIED) and not (meta & INVALID)
+    st_, out, found, _ = dht_read(st_, extra_k[1:])
+    assert bool(found.all()) and bool((out == extra_v[1:]).all())
+    assert float(occupancy(st_)[0]) == 1.0
+
+
+def test_pack_floats_preserves_negative_zero_and_subnormals():
+    x = jnp.asarray([[ -0.0, 0.0, 1.4e-45, -1.4e-45, 1.17549421e-38 ]],
+                    jnp.float32)
+    w = pack_floats(x, 10)
+    back = unpack_floats(w, 5)
+    # bit-exact round trip: negative zero keeps its sign bit, subnormals
+    # are not flushed
+    np.testing.assert_array_equal(
+        np.asarray(x).view(np.uint32), np.asarray(back).view(np.uint32))
+    assert np.signbit(np.asarray(back))[0, 0]
+    assert not np.signbit(np.asarray(back))[0, 1]
+
+
+def test_pack_floats_pads_when_n_words_exceeds_2k():
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(4, 3)), jnp.float32)
+    w = pack_floats(x, 12)          # 2k = 6 < 12: the tail must be zero
+    assert w.shape == (4, 12)
+    np.testing.assert_array_equal(np.asarray(w[:, 6:]), 0)
+    # odd interleave slots stay zero too (paper-sized 2-word f32 layout)
+    np.testing.assert_array_equal(np.asarray(w[:, 1:6:2]), 0)
+    back = unpack_floats(w, 3)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(x))
+
+
+def test_pack_floats_truncates_when_n_words_smaller_than_2k():
+    x = jnp.asarray(np.arange(8, dtype=np.float32)[None], jnp.float32)
+    w = pack_floats(x, 4)           # room for only the first 2 floats
+    assert w.shape == (1, 4)
+    back = unpack_floats(w, 2)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(x[:, :2]))
 
 
 def test_routing_overflow_is_miss_not_error():
