@@ -16,6 +16,7 @@ import numpy as np
 from repro.core import (
     DHTConfig,
     dht_create,
+    dht_occupancy,
     dht_read,
     dht_resize,
     dht_write,
@@ -86,6 +87,15 @@ def run(quick: bool = True):
                     0.0,
                     f"hits={int(rs['hits'])};queries={n};"
                     f"hit_fraction={float(np.mean(np.asarray(found))):.4f}"))
+
+    # table health after grow/shrink/leave: balanced load, no INVALID debris
+    occ = dht_occupancy(st)
+    per = np.asarray(occ["live_per_shard"])
+    rows.append(Row(
+        "reshard/occupancy", 0.0,
+        f"load_factor={float(occ['load_factor']):.4f};"
+        f"live_min={int(per.min())};live_max={int(per.max())};"
+        f"invalid={int(np.sum(np.asarray(occ['invalid_per_shard'])))}"))
     return rows
 
 

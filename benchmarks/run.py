@@ -1,9 +1,13 @@
 """Benchmark runner: one function per paper table/figure.
-Prints ``name,us_per_call,derived`` CSV.
+Prints ``name,us_per_call,derived`` CSV; ``--json PATH`` additionally
+writes the same rows machine-readably (``BENCH_<name>`` -> row dicts) so
+the perf trajectory is tracked across PRs.
 
-    PYTHONPATH=src:. python -m benchmarks.run [--full]
+    PYTHONPATH=src:. python -m benchmarks.run [--full] [--json PATH]
 """
 import argparse
+import dataclasses
+import json
 import sys
 import time
 import traceback
@@ -15,6 +19,8 @@ def main() -> None:
                     help="paper-sized sweeps (slow on 1 CPU core)")
     ap.add_argument("--only", default=None,
                     help="comma-separated bench names (e.g. fig45,kernels)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write results as JSON {BENCH_<name>: [rows]}")
     args = ap.parse_args()
     quick = not args.full
 
@@ -23,6 +29,7 @@ def main() -> None:
         bench_fig45_throughput,
         bench_fig6_mixed,
         bench_fig7_poet,
+        bench_interp,
         bench_kernels,
         bench_resharding,
         bench_roofline,
@@ -38,14 +45,21 @@ def main() -> None:
         "fig7": bench_fig7_poet,
         "valsize": bench_value_sizes,
         "kernels": bench_kernels,
+        "interp": bench_interp,
         "reshard": bench_resharding,
         "roofline": bench_roofline,
     }
     selected = (args.only.split(",") if args.only else list(benches))
 
     print("name,us_per_call,derived")
+    results: dict[str, list[dict]] = {}
     failures = 0
-    for name in selected:
+    for name in [n for n in selected if n not in benches]:
+        failures += 1
+        print(f"{name},NaN,ERROR:unknown bench (known: {','.join(benches)})")
+        results[f"BENCH_{name}"] = [
+            {"name": name, "us_per_call": None, "derived": "ERROR:unknown"}]
+    for name in [n for n in selected if n in benches]:
         mod = benches[name]
         t0 = time.perf_counter()
         try:
@@ -54,12 +68,21 @@ def main() -> None:
                 rows = rows + mod.table1(rows)
             for r in rows:
                 print(r.csv())
+            results[f"BENCH_{name}"] = [dataclasses.asdict(r) for r in rows]
         except Exception as e:
             failures += 1
             print(f"{name},NaN,ERROR:{type(e).__name__}:{e}")
             traceback.print_exc(file=sys.stderr)
+            results[f"BENCH_{name}"] = [
+                {"name": name, "us_per_call": None,
+                 "derived": f"ERROR:{type(e).__name__}:{e}"}]
         print(f"# {name} done in {time.perf_counter() - t0:.1f}s",
               file=sys.stderr)
+    if args.json:
+        payload = {"failures": failures, "quick": quick, **results}
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"# wrote {args.json}", file=sys.stderr)
     if failures:
         sys.exit(1)
 

@@ -28,7 +28,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import DHTConfig, SurrogateConfig
+from repro.core import (
+    DHTConfig,
+    InterpConfig,
+    PROV_EXACT,
+    PROV_INTERP,
+    PROV_MISS,
+    SurrogateConfig,
+    lookup_or_interpolate,
+)
 from repro.core.layout import dht_create, pack_floats, unpack_floats
 from repro.core.surrogate import make_keys
 from repro.core import dht_read, dht_write
@@ -57,6 +65,12 @@ class PoetConfig:
     dht_buckets: int = 1 << 14
     inj_mg: float = 2.0        # injected MgCl2
     inj_cl: float = 4.0
+    # neighborhood queries (DESIGN.md §6): resolve near-miss states by IDW
+    # interpolation over cached lattice neighbors instead of the solver
+    use_interp: bool = False
+    interp_radius: int = 1
+    interp_max_dist: float = 2.0
+    interp_min_neighbors: int = 2
 
 
 def initial_state(cfg: PoetConfig) -> jnp.ndarray:
@@ -178,6 +192,12 @@ def run_simulation(cfg: PoetConfig, use_dht: bool = True,
     read_jit = jax.jit(
         lambda t, x, v: dht_read(t, make_keys(scfg, x), valid=v),
         donate_argnums=(0,))
+    icfg = InterpConfig(
+        radius=cfg.interp_radius, max_neighbor_dist=cfg.interp_max_dist,
+        min_neighbors=cfg.interp_min_neighbors)
+    interp_jit = jax.jit(
+        lambda t, x, v: lookup_or_interpolate(scfg, t, x, icfg, valid=v),
+        donate_argnums=(0,))
     write_jit = jax.jit(
         lambda t, x, o, v: dht_write(
             t, make_keys(scfg, x), pack_floats(o, scfg.dht.val_words), valid=v),
@@ -186,7 +206,7 @@ def run_simulation(cfg: PoetConfig, use_dht: bool = True,
     # key rounding for this system, so grouping never merges distinct keys)
     group_key = jax.jit(lambda x: jnp.round(x * 1e6) / 1e6)
     READ_BUCKET, MISS_BUCKET = 2048, 512
-    hits = misses = chem_calls = mismatches = 0
+    hits = interp_hits = misses = chem_calls = mismatches = 0
 
     # warm the compiled paths: the paper's 500-step production runs amortize
     # XLA compilation; one-time compiles are excluded from the comparison
@@ -195,7 +215,10 @@ def run_simulation(cfg: PoetConfig, use_dht: bool = True,
     del warm_state
     if use_dht:
         wk = jnp.zeros((READ_BUCKET, N_IN), jnp.float32)
-        table, *_ = read_jit(table, wk, jnp.zeros((READ_BUCKET,), bool))
+        if cfg.use_interp:
+            table, *_ = interp_jit(table, wk, jnp.zeros((READ_BUCKET,), bool))
+        else:
+            table, *_ = read_jit(table, wk, jnp.zeros((READ_BUCKET,), bool))
         wm = jnp.zeros((MISS_BUCKET, N_IN), jnp.float32)
         wout = chem(wm)
         table, _ = write_jit(table, wm, wout, jnp.zeros((MISS_BUCKET,), bool))
@@ -226,6 +249,7 @@ def run_simulation(cfg: PoetConfig, use_dht: bool = True,
             nu = uniq_rows.shape[0]
             out_u = np.zeros((nu, N_OUT), np.float32)
             found_np = np.zeros((nu,), bool)
+            exact_np = np.zeros((nu,), bool)
             # fixed-size buckets -> a bounded set of compiled shapes;
             # result assembly stays on the host (numpy) — each un-jitted
             # device op costs more in dispatch than the whole assembly
@@ -234,15 +258,27 @@ def run_simulation(cfg: PoetConfig, use_dht: bool = True,
                 upad = np.zeros((READ_BUCKET, inputs.shape[1]), np.float32)
                 upad[: hi_ - lo] = uniq_rows[lo:hi_]
                 uvalid = jnp.zeros((READ_BUCKET,), bool).at[: hi_ - lo].set(True)
-                table, vals_w, found, rstats = read_jit(
-                    table, jnp.asarray(upad), uvalid)
-                found_np[lo:hi_] = np.asarray(found)[: hi_ - lo]
-                vw = np.asarray(vals_w)[: hi_ - lo]
-                out_u[lo:hi_] = np.ascontiguousarray(
-                    vw[:, 0:2 * N_OUT:2]).view(np.float32)
+                if cfg.use_interp:
+                    # neighborhood query: exact hit, or IDW over cached
+                    # lattice neighbors — both skip the solver for this row
+                    table, out_f, prov, rstats = interp_jit(
+                        table, jnp.asarray(upad), uvalid)
+                    pv = np.asarray(prov)[: hi_ - lo]
+                    found_np[lo:hi_] = pv != PROV_MISS
+                    exact_np[lo:hi_] = pv == PROV_EXACT
+                    out_u[lo:hi_] = np.asarray(out_f)[: hi_ - lo]
+                else:
+                    table, vals_w, found, rstats = read_jit(
+                        table, jnp.asarray(upad), uvalid)
+                    found_np[lo:hi_] = np.asarray(found)[: hi_ - lo]
+                    exact_np[lo:hi_] = found_np[lo:hi_]
+                    vw = np.asarray(vals_w)[: hi_ - lo]
+                    out_u[lo:hi_] = np.ascontiguousarray(
+                        vw[:, 0:2 * N_OUT:2]).view(np.float32)
                 mismatches += int(rstats["mismatches"])
             # per-cell accounting (the paper counts per-request hits)
-            hits += int(found_np[inv].sum())
+            hits += int(exact_np[inv].sum())
+            interp_hits += int((found_np & ~exact_np)[inv].sum())
             misses += int((~found_np[inv]).sum())
             miss_idx = np.nonzero(~found_np)[0]
             for lo in range(0, miss_idx.size, MISS_BUCKET):
@@ -265,14 +301,16 @@ def run_simulation(cfg: PoetConfig, use_dht: bool = True,
                   f"hits {hits} misses {misses}")
 
     wall = time.perf_counter() - t0
-    total = hits + misses
+    total = hits + interp_hits + misses
     return {
         "conc": state,
         "wall_s": wall,
         "chem_s": t_chem,
         "chem_calls": chem_calls,
-        "hit_rate": hits / total if total else 0.0,
+        "hit_rate": (hits + interp_hits) / total if total else 0.0,
+        "exact_hit_rate": hits / total if total else 0.0,
         "hits": hits,
+        "interp_hits": interp_hits,
         "misses": misses,
         "mismatches": mismatches,
         "grid": (cfg.nx, cfg.ny),
@@ -281,16 +319,27 @@ def run_simulation(cfg: PoetConfig, use_dht: bool = True,
 
 
 def main():
-    cfg = PoetConfig()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--interp", action="store_true",
+                    help="resolve near-miss states by stencil interpolation "
+                         "over cached lattice neighbors (DESIGN.md §6)")
+    args = ap.parse_args()
+
+    cfg = PoetConfig(use_interp=args.interp)
     print(f"grid {cfg.nx}x{cfg.ny}, {cfg.n_steps} steps, "
-          f"sig_digits={cfg.sig_digits}")
+          f"sig_digits={cfg.sig_digits}, interp={cfg.use_interp}")
     ref = run_simulation(cfg, use_dht=False)
     print(f"reference (no DHT): {ref['wall_s']:.2f}s "
           f"({ref['chem_calls']} chemistry calls)")
     dht = run_simulation(cfg, use_dht=True, verbose=True)
+    extra = (f", {dht['interp_hits']} interpolated"
+             if cfg.use_interp else "")
     print(f"with lock-free DHT: {dht['wall_s']:.2f}s "
           f"({dht['chem_calls']} chemistry calls, "
-          f"hit rate {dht['hit_rate']*100:.1f}%)")
+          f"hit rate {dht['hit_rate']*100:.1f}%"
+          f" [exact {dht['exact_hit_rate']*100:.1f}%]{extra})")
     gain = (ref["wall_s"] - dht["wall_s"]) / ref["wall_s"] * 100
     print(f"performance gain: {gain:.1f}%  (paper Table 3: 14%-42%)")
     err = float(jnp.abs(dht["conc"] - ref["conc"]).max())

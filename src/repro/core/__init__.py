@@ -9,6 +9,7 @@ from .layout import (  # noqa: F401
     MODE_LOCKFREE,
     dht_create,
     dht_free,
+    dht_occupancy,
     occupancy,
 )
 from .layout import with_ring  # noqa: F401
@@ -19,7 +20,23 @@ from .dht import (  # noqa: F401
     W_UPDATE,
     dht_read,
     dht_read_dual,
+    dht_read_many,
+    dht_read_many_dual,
     dht_write,
+)
+from .neighbors import (  # noqa: F401
+    dedup_mask,
+    lattice_step,
+    n_stencil,
+    stencil_keys,
+    stencil_offsets,
+    stencil_points,
+)
+from .interp import (  # noqa: F401
+    PROV_EXACT,
+    PROV_INTERP,
+    PROV_MISS,
+    InterpConfig,
 )
 from .membership import (  # noqa: F401
     RingState,
@@ -45,7 +62,9 @@ from .migrate import (  # noqa: F401
 from .surrogate import (  # noqa: F401
     SurrogateConfig,
     lookup,
+    lookup_interpolate_or_compute,
     lookup_or_compute,
+    lookup_or_interpolate,
     make_keys,
     round_significant,
     store,

@@ -399,6 +399,62 @@ def dht_read(
     return _state_from(state, slab), val_out, found_out, stats
 
 
+def dht_read_many(
+    state: DHTState,
+    keys: jnp.ndarray,
+    valid: jnp.ndarray | None = None,
+    *,
+    axis_name: Any = None,
+) -> tuple[DHTState, jnp.ndarray, jnp.ndarray, dict[str, jnp.ndarray]]:
+    """Batched multi-key read: probe m candidate keys per query row in ONE
+    routing round (the neighborhood-query hot path, DESIGN.md §6).
+
+    ``keys`` is (n, m, KW) — e.g. the stencil lattice neighborhood of n
+    queries from :func:`repro.core.neighbors.stencil_keys`; ``valid`` is an
+    optional (n, m) mask (dedup / row-padding).  All n*m probes share one
+    ``bin_by_dest``/``dispatch``/``collect`` cycle on both backends, so the
+    collective cost matches a flat batch of the same size — there is no
+    per-stencil-point round-trip amplification.
+
+    Returns ``(state', vals (n, m, VW), found (n, m), stats)``.
+    """
+    n, m = keys.shape[0], keys.shape[1]
+    flat, vflat = routing.flatten_fanout(keys, valid)
+    state, val, found, stats = dht_read(state, flat, vflat, axis_name=axis_name)
+    return (
+        state,
+        routing.unflatten_fanout(val, n, m),
+        routing.unflatten_fanout(found, n, m),
+        stats,
+    )
+
+
+def dht_read_many_dual(
+    state: DHTState,
+    prev: DHTState,
+    keys: jnp.ndarray,
+    valid: jnp.ndarray | None = None,
+    *,
+    axis_name: Any = None,
+) -> tuple[DHTState, DHTState, jnp.ndarray, jnp.ndarray, dict[str, jnp.ndarray]]:
+    """Dual-epoch variant of :func:`dht_read_many` — composes neighborhood
+    queries with an in-flight migration (DESIGN.md §5): each flat probe
+    consults the new-epoch owners first, old-epoch owners for the residual
+    misses, so a stencil neighbor mid-move is still found."""
+    n, m = keys.shape[0], keys.shape[1]
+    flat, vflat = routing.flatten_fanout(keys, valid)
+    state, prev, val, found, stats = dht_read_dual(
+        state, prev, flat, vflat, axis_name=axis_name
+    )
+    return (
+        state,
+        prev,
+        routing.unflatten_fanout(val, n, m),
+        routing.unflatten_fanout(found, n, m),
+        stats,
+    )
+
+
 def dht_read_dual(
     state: DHTState,
     prev: DHTState,
@@ -445,6 +501,8 @@ __all__ = [
     "DHTState",
     "dht_read",
     "dht_read_dual",
+    "dht_read_many",
+    "dht_read_many_dual",
     "dht_write",
     "W_DROPPED",
     "W_INSERT",

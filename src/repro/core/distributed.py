@@ -120,6 +120,27 @@ class ShardedDHT:
             )
         )
 
+    def read_many_fn(self, state: DHTState | None = None):
+        """Neighborhood (multi-key) read: (n, m, KW) candidate keys per
+        batch row, all probed in ONE all_to_all round (DESIGN.md §6)."""
+        axes, state_spec, batch_spec = self._specs(state)
+
+        def fn(state, keys, valid):
+            state, vals, found, stats = dht_ops.dht_read_many(
+                state, keys, valid, axis_name=axes)
+            return state, vals, found, _psum_stats(stats, axes)
+
+        stats_spec = {k: P() for k in
+                      ("hits", "misses", "mismatches", "dropped",
+                       "lock_tokens", "epoch")}
+        return jax.jit(
+            shard_map(
+                fn, mesh=self.mesh,
+                in_specs=(state_spec, batch_spec, batch_spec),
+                out_specs=(state_spec, batch_spec, batch_spec, stats_spec),
+            )
+        )
+
     def _ones(self, n: int):
         return jax.device_put(
             jnp.ones((n,), bool),
@@ -135,6 +156,22 @@ class ShardedDHT:
     def read(self, keys, valid=None):
         valid = self._ones(keys.shape[0]) if valid is None else valid
         self.state, vals, found, stats = self.read_fn()(self.state, keys, valid)
+        return vals, found, stats
+
+    def read_many(self, keys, valid=None):
+        if valid is None:
+            valid = jax.device_put(
+                jnp.ones(keys.shape[:2], bool),
+                NamedSharding(self.mesh, P(mesh_axes(self.mesh))))
+        # cache the jitted closure: this is the neighborhood-query hot path
+        # and a fresh shard_map wrapper per call would retrace every time
+        # (keyed on ring presence — the only structural state change)
+        key = self.state.ring is None
+        cached = getattr(self, "_read_many_cache", None)
+        if cached is None or cached[0] != key:
+            cached = (key, self.read_many_fn())
+            self._read_many_cache = cached
+        self.state, vals, found, stats = cached[1](self.state, keys, valid)
         return vals, found, stats
 
     # -- elastic membership (DESIGN.md §4-5) ------------------------------

@@ -108,12 +108,38 @@ def dht_free(state: DHTState) -> None:
     del state
 
 
+def _live_mask(meta: jnp.ndarray) -> jnp.ndarray:
+    """The single definition of bucket liveness: occupied and not INVALID."""
+    return ((meta & OCCUPIED) != 0) & ((meta & INVALID) == 0)
+
+
 @partial(jax.jit, static_argnames=("cfg",))
 def occupancy(state: DHTState, cfg: DHTConfig | None = None) -> jnp.ndarray:
     """Fraction of occupied (and valid) buckets, per shard."""
+    return _live_mask(state.meta).mean(axis=-1)
+
+
+def dht_occupancy(state: DHTState) -> dict[str, jnp.ndarray]:
+    """Table health snapshot: per-shard OCCUPIED/INVALID counts + load factor.
+
+    POET's occupancy climbs monotonically over a run, and both eviction
+    pressure and the neighborhood-query hit rate are direct functions of
+    it — benches report this dict next to their timings so hit-rate
+    numbers are interpretable.  ``load_factor`` counts only live
+    (occupied ∧ ¬INVALID) buckets; ``invalid`` tracks buckets retired by
+    lock-free checksum divergence awaiting writer reclaim."""
     m = state.meta
-    occ = ((m & OCCUPIED) != 0) & ((m & INVALID) == 0)
-    return occ.mean(axis=-1)
+    occ = (m & OCCUPIED) != 0
+    inv = (m & INVALID) != 0
+    live = _live_mask(m)
+    return {
+        "occupied_per_shard": jnp.sum(occ, axis=-1).astype(jnp.int32),
+        "invalid_per_shard": jnp.sum(inv, axis=-1).astype(jnp.int32),
+        "live_per_shard": jnp.sum(live, axis=-1).astype(jnp.int32),
+        "load_factor_per_shard": live.mean(axis=-1),
+        "load_factor": live.mean(),
+        "buckets_per_shard": jnp.int32(state.cfg.buckets_per_shard),
+    }
 
 
 def pack_floats(x: jnp.ndarray, n_words: int) -> jnp.ndarray:

@@ -1,0 +1,170 @@
+"""Stencil enumeration for approximate (neighborhood) cache queries.
+
+The surrogate key space is a *lattice*: every stored key is a vector
+rounded to ``sig_digits`` significant digits (``surrogate.round_significant``).
+A query that misses its own lattice point may still sit within one or two
+lattice steps of keys some earlier computation *did* store — the paper's
+"interpolate or extrapolate further simulation output values" idea.  This
+module enumerates that neighborhood deterministically:
+
+- the **center** (the query's own rounded point);
+- a **star stencil**: per dimension, ±1..±radius lattice steps, where one
+  step is the unit in the last significant place at that magnitude
+  (``10^(floor(log10 |x|) - (sig_digits - 1))``) — ``2 * radius * D``
+  points, each re-rounded so decade boundaries land back on the lattice;
+- optionally one **coarse-tier** point: the center rounded at
+  ``sig_digits - 1``.  Coarser rounding is magnitude-aware clustering —
+  the decade-aligned lattice point that nearby states collapse onto.
+
+The enumeration order is a *static* list (:func:`stencil_offsets`) shared
+by the pure-JAX reference here and the fused Pallas kernel
+(``kernels/stencil_kernel.py``), which must agree bit-for-bit on the
+packed keys.  Re-rounding means stencil entries can collide at decade
+boundaries (9.99 + step -> 10.0 == 10.0 + 0); :func:`dedup_mask` masks
+the duplicates so routing capacity and interpolation weights count each
+lattice point once.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .layout import pack_floats
+
+
+def stencil_offsets(n_dims: int, radius: int,
+                    coarse_tier: bool = True) -> list[tuple[int, int]]:
+    """Static (dim, offset) enumeration shared by reference and kernel.
+
+    Entry 0 is the center ``(-1, 0)``; then ring r = 1..radius, each
+    dimension in order, +r before -r; a trailing ``(-2, 0)`` marks the
+    coarse-tier point.  Total ``1 + 2 * radius * n_dims (+ 1)``.
+    """
+    out: list[tuple[int, int]] = [(-1, 0)]
+    for r in range(1, radius + 1):
+        for d in range(n_dims):
+            out.append((d, r))
+            out.append((d, -r))
+    if coarse_tier:
+        out.append((-2, 0))
+    return out
+
+
+def n_stencil(n_dims: int, radius: int, coarse_tier: bool = True) -> int:
+    return 1 + 2 * radius * n_dims + (1 if coarse_tier else 0)
+
+
+# smallest positive normal float32: denormals have no log10-stable
+# magnitude (and TPUs flush them anyway), so rounding sends them to 0
+TINY_F32 = 1.1754944e-38
+
+
+def pow10(e: jnp.ndarray) -> jnp.ndarray:
+    """10^e with the exponent clamped to the finite f32 decade range.
+
+    Keys must be the *same function* of the input everywhere they are
+    derived (jnp path, Pallas kernels, both routing backends), so the
+    rescale is written as two multiplications by pow10(±e) — a division
+    would let XLA substitute a reciprocal under jit and shift results by
+    an ulp between compilation contexts, silently splitting the lattice.
+    The clamp keeps the scale finite for magnitudes near the normal
+    floor/ceiling (rounding there degrades toward fewer digits instead of
+    producing inf*0 = nan)."""
+    return jnp.power(jnp.float32(10.0), jnp.clip(e, -38.0, 38.0))
+
+
+def round_significant(x: jnp.ndarray, sig_digits: int) -> jnp.ndarray:
+    """Round to ``sig_digits`` significant (decimal) digits, elementwise.
+
+    The lattice projection every surrogate key goes through (re-exported
+    as ``surrogate.round_significant``; reference for
+    ``kernels/round_kernel.py``).  Zeros and denormals map to 0; inf/nan
+    pass through unchanged."""
+    x = x.astype(jnp.float32)
+    absx = jnp.abs(x)
+    finite = jnp.isfinite(x)
+    tiny = absx < jnp.float32(TINY_F32)
+    safe = jnp.where(finite & ~tiny, absx, 1.0)
+    exp = jnp.floor(jnp.log10(safe))
+    e = (sig_digits - 1) - exp
+    out = jnp.round(x * pow10(e)) * pow10(-e)
+    out = jnp.where(tiny, 0.0, out)
+    return jnp.where(finite, out, x).astype(jnp.float32)
+
+
+def lattice_step(x_rounded: jnp.ndarray, sig_digits: int) -> jnp.ndarray:
+    """Size of one lattice step at each coordinate's magnitude.
+
+    The unit in the last significant place: ``10^(exp - (sig_digits-1))``
+    with ``exp = floor(log10 |x|)``.  Zeros (no magnitude of their own)
+    step at the unit scale ``10^-(sig_digits-1)``."""
+    absx = jnp.abs(x_rounded.astype(jnp.float32))
+    finite = jnp.isfinite(absx)
+    tiny = absx < jnp.float32(TINY_F32)
+    safe = jnp.where(finite & ~tiny, absx, 1.0)
+    exp = jnp.floor(jnp.log10(safe))
+    return pow10(exp - (sig_digits - 1)).astype(jnp.float32)
+
+
+def stencil_points(
+    inputs: jnp.ndarray, sig_digits: int, radius: int = 1,
+    coarse_tier: bool = True,
+) -> jnp.ndarray:
+    """(n, D) float queries -> (n, M, D) float32 neighboring lattice points.
+
+    Every returned point is a fixed point of the ``sig_digits`` rounding
+    (offsets are re-rounded), i.e. a key an exact-match write could have
+    produced."""
+    center = round_significant(inputs, sig_digits)              # (n, D)
+    step = lattice_step(center, sig_digits)              # (n, D)
+    entries = []
+    for dim, off in stencil_offsets(inputs.shape[-1], radius, coarse_tier):
+        if dim == -1:
+            entries.append(center)
+        elif dim == -2:
+            # re-round at sig_digits: writers only ever produce sig-lattice
+            # bit patterns, so the coarse point must be expressed on that
+            # lattice for its packed key to be matchable at all
+            entries.append(round_significant(
+                round_significant(center, sig_digits - 1), sig_digits))
+        else:
+            p = center.at[..., dim].add(off * step[..., dim])
+            entries.append(round_significant(p, sig_digits))
+    return jnp.stack(entries, axis=-2)                   # (n, M, D)
+
+
+def stencil_keys(
+    inputs: jnp.ndarray, sig_digits: int, key_words: int, radius: int = 1,
+    coarse_tier: bool = True,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(n, D) queries -> packed DHT keys (n, M, KW) + points (n, M, D).
+
+    The pure-JAX reference for ``kernels/stencil_kernel.py`` (which must
+    match these keys bit-for-bit)."""
+    points = stencil_points(inputs, sig_digits, radius, coarse_tier)
+    return pack_floats(points, key_words), points
+
+
+def dedup_mask(keys: jnp.ndarray) -> jnp.ndarray:
+    """(n, M, KW) packed stencil keys -> (n, M) bool, True on the first
+    occurrence of each distinct key within a row.
+
+    Re-rounding collapses stencil entries at decade boundaries; masking the
+    duplicates keeps routing load minimal and interpolation weights
+    unbiased (one vote per lattice point).  O(M^2) per row — M is ~20-40."""
+    eq = jnp.all(keys[:, :, None, :] == keys[:, None, :, :], axis=-1)  # (n,M,M)
+    m = keys.shape[1]
+    earlier = jnp.tril(jnp.ones((m, m), bool), k=-1)
+    dup = jnp.any(eq & earlier[None], axis=-1)
+    return ~dup
+
+
+__all__ = [
+    "TINY_F32",
+    "dedup_mask",
+    "lattice_step",
+    "n_stencil",
+    "stencil_keys",
+    "stencil_offsets",
+    "stencil_points",
+    "round_significant",
+]

@@ -133,6 +133,25 @@ def collect(
     return out
 
 
+def flatten_fanout(
+    keys: jnp.ndarray, valid: jnp.ndarray | None = None
+) -> tuple[jnp.ndarray, jnp.ndarray | None]:
+    """(n, m, ...) per-query fan-out (e.g. stencil keys) -> one flat batch.
+
+    The whole point of the multi-key read path: the m neighborhood probes
+    of every query ride the *same* ``bin_by_dest``/``dispatch`` round as a
+    plain batch of n*m queries — one ``all_to_all`` each way, not m."""
+    n, m = keys.shape[0], keys.shape[1]
+    flat = keys.reshape((n * m,) + keys.shape[2:])
+    vflat = None if valid is None else valid.reshape(n * m)
+    return flat, vflat
+
+
+def unflatten_fanout(x: jnp.ndarray, n: int, m: int) -> jnp.ndarray:
+    """Inverse of :func:`flatten_fanout` for replies: (n*m, ...) -> (n, m, ...)."""
+    return x.reshape((n, m) + x.shape[1:])
+
+
 def merge_dual_epoch(
     found_new: jnp.ndarray,
     vals_new: jnp.ndarray,

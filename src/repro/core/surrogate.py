@@ -7,7 +7,10 @@ rounded inputs coincide skips the expensive computation entirely —
 trading modeling accuracy for speed via the rounding knob.
 
 `lookup_or_compute` is the whole integration surface an application needs
-(POET example: `examples/poet_reactive_transport.py`).
+(POET example: `examples/poet_reactive_transport.py`);
+`lookup_or_interpolate` upgrades exact matching to neighborhood queries —
+near-misses resolve by inverse-distance interpolation over cached lattice
+neighbors (DESIGN.md §6) instead of paying the solver.
 """
 from __future__ import annotations
 
@@ -17,21 +20,11 @@ import jax
 import jax.numpy as jnp
 
 from . import dht as dht_ops
-from . import membership, migrate
+from . import interp as interp_ops
+from . import membership, migrate, neighbors
+from .interp import PROV_EXACT, PROV_INTERP, PROV_MISS, InterpConfig
 from .layout import DHTConfig, DHTState, dht_create, pack_floats, unpack_floats
-
-
-def round_significant(x: jnp.ndarray, sig_digits: int) -> jnp.ndarray:
-    """Round to ``sig_digits`` significant (decimal) digits, elementwise.
-
-    The reference implementation for ``kernels/round_kernel.py``."""
-    x = x.astype(jnp.float32)
-    absx = jnp.abs(x)
-    safe = jnp.where(absx > 0, absx, 1.0)
-    exp = jnp.floor(jnp.log10(safe))
-    scale = jnp.power(10.0, (sig_digits - 1) - exp)
-    out = jnp.round(x * scale) / scale
-    return jnp.where(absx > 0, out, 0.0).astype(jnp.float32)
+from .neighbors import round_significant  # noqa: F401  (canonical home moved)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -111,14 +104,109 @@ def lookup_or_compute(
 
     ``compute_fn(inputs) -> outputs`` is the expensive simulation.  In JAX's
     batched execution the misses are computed for all rows and selected by
-    mask; the *work saved* is therefore accounted by the returned hit stats
-    (and realized wall-clock in the round-trip-driven host loop of the POET
-    example, which skips the solver entirely on full-hit tiles).
+    mask; the *work saved* is therefore accounted by the returned hit stats.
+    On the host-loop (un-traced) path a full-hit batch short-circuits:
+    ``compute_fn`` is never invoked — the realized wall-clock saving of the
+    POET example's full-hit tiles, now in the library itself.
     """
     state, cached, found, rstats = lookup(cfg, state, inputs, axis_name=axis_name)
+    if not isinstance(found, jax.core.Tracer) and bool(found.all()):
+        stats = {"hits": rstats["hits"], "misses": rstats["misses"],
+                 "mismatches": rstats["mismatches"],
+                 "stored": jnp.int32(0)}
+        return state, cached, found, stats
     computed = compute_fn(inputs)
     outputs = jnp.where(found[:, None], cached, computed)
     state, wstats = store(cfg, state, inputs, computed, valid=~found, axis_name=axis_name)
     stats = {"hits": rstats["hits"], "misses": rstats["misses"],
              "mismatches": rstats["mismatches"], "stored": wstats["inserted"]}
     return state, outputs, found, stats
+
+
+def lookup_or_interpolate(
+    cfg: SurrogateConfig,
+    state: DHTState,
+    inputs: jnp.ndarray,
+    icfg: InterpConfig = InterpConfig(),
+    *,
+    valid=None,
+    prev: DHTState | None = None,
+    axis_name=None,
+):
+    """Neighborhood query: exact hit -> cached value; near-miss -> IDW
+    interpolation over cached lattice neighbors; else miss (DESIGN.md §6).
+
+    Enumerates the ±``icfg.radius`` stencil around each query's rounded
+    key (plus the optional ``sig_digits - 1`` coarse tier), probes all
+    stencil keys in ONE routing round (:func:`repro.core.dht.dht_read_many`;
+    dual-epoch via ``prev`` while a migration is in flight), and gates the
+    blend on ``icfg.max_neighbor_dist`` / ``icfg.min_neighbors``.
+
+    Returns ``(state', outputs (n, n_outputs), provenance (n,), stats)`` —
+    or, with ``prev``, the flat ``(state', prev', outputs, provenance,
+    stats)`` matching :func:`repro.core.dht.dht_read_many_dual` —
+    with per-row provenance ``PROV_EXACT`` / ``PROV_INTERP`` /
+    ``PROV_MISS``.  Exact rows return the stored value bit-identically to
+    :func:`lookup`; interpolated rows carry the rounding-scale model error
+    the tolerance gate admits.  ``valid`` masks whole rows (bucket
+    padding): masked rows probe nothing and report ``PROV_MISS``.
+    """
+    keys, points = neighbors.stencil_keys(
+        inputs, cfg.sig_digits, cfg.dht.key_words,
+        radius=icfg.radius, coarse_tier=icfg.coarse_tier)
+    vmask = neighbors.dedup_mask(keys)
+    if valid is None:
+        valid = jnp.ones((inputs.shape[0],), bool)
+    vmask = vmask & valid[:, None]
+    if prev is None:
+        state, val_words, found, rstats = dht_ops.dht_read_many(
+            state, keys, vmask, axis_name=axis_name)
+    else:
+        state, prev, val_words, found, rstats = dht_ops.dht_read_many_dual(
+            state, prev, keys, vmask, axis_name=axis_name)
+    values = unpack_floats(val_words, cfg.n_outputs)        # (n, M, O)
+    # stencil entry 0 is the rounded center — reuse it for the step scale
+    step = neighbors.lattice_step(points[:, 0], cfg.sig_digits)
+    outputs, provenance, istats = interp_ops.interpolate(
+        inputs, points, values, found, step, icfg)
+    stats = {
+        "exact": istats["exact"],
+        "interpolated": istats["interpolated"],
+        "misses": jnp.sum(valid & (provenance == PROV_MISS)).astype(jnp.int32),
+        "neighbors_mean": istats["neighbors_mean"],
+        "probe_hits": rstats["hits"],
+        "mismatches": rstats["mismatches"],
+        "dropped": rstats["dropped"],
+        "epoch": rstats["epoch"],
+    }
+    if prev is None:
+        return state, outputs, provenance, stats
+    return state, prev, outputs, provenance, stats
+
+
+def lookup_interpolate_or_compute(
+    cfg: SurrogateConfig,
+    state: DHTState,
+    inputs: jnp.ndarray,
+    compute_fn,
+    icfg: InterpConfig = InterpConfig(),
+    *,
+    axis_name=None,
+):
+    """:func:`lookup_or_compute` with the neighborhood fast path: only rows
+    neither cached nor interpolable pay ``compute_fn``; freshly computed
+    (exact) outputs are published back — interpolated ones are NOT stored,
+    so model error never re-enters the table as ground truth.
+
+    Host-loop fast path: a batch fully resolved by the cache (no
+    ``PROV_MISS`` row) skips ``compute_fn`` entirely."""
+    state, resolved_out, provenance, stats = lookup_or_interpolate(
+        cfg, state, inputs, icfg, axis_name=axis_name)
+    miss = provenance == PROV_MISS
+    if not isinstance(miss, jax.core.Tracer) and not bool(miss.any()):
+        return state, resolved_out, provenance, {**stats, "stored": jnp.int32(0)}
+    computed = compute_fn(inputs)
+    outputs = jnp.where(miss[:, None], computed, resolved_out)
+    state, wstats = store(cfg, state, inputs, computed, valid=miss,
+                          axis_name=axis_name)
+    return state, outputs, provenance, {**stats, "stored": wstats["inserted"]}

@@ -11,6 +11,7 @@ from .checksum_kernel import checksum_pallas
 from .hash_kernel import hash64_pallas
 from .probe_kernel import probe_pallas
 from .round_kernel import round_sig_pallas
+from .stencil_kernel import stencil_keys_pallas
 
 
 def _default_interpret() -> bool:
@@ -42,6 +43,15 @@ def probe(slab_keys, slab_vals, slab_meta, slab_csum, qkeys, base,
 def round_sig(x, sig_digits, *, interpret: bool | None = None):
     return round_sig_pallas(
         x, sig_digits,
+        interpret=_default_interpret() if interpret is None else interpret,
+    )
+
+
+def stencil_keys(x, sig_digits, key_words, *, radius=1, coarse_tier=True,
+                 n_buckets=1024, n_probe=6, interpret: bool | None = None):
+    return stencil_keys_pallas(
+        x, sig_digits, key_words, radius=radius, coarse_tier=coarse_tier,
+        n_buckets=n_buckets, n_probe=n_probe,
         interpret=_default_interpret() if interpret is None else interpret,
     )
 

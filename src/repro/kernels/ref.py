@@ -11,6 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.hashing import (
+    base_bucket,
     byte_window_indices,
     checksum32,
     hash64,
@@ -18,6 +19,7 @@ from repro.core.hashing import (
     probe_indices,
 )
 from repro.core.layout import INVALID, OCCUPIED
+from repro.core.neighbors import stencil_keys
 from repro.core.surrogate import round_significant
 
 
@@ -89,6 +91,24 @@ def ref_byte_window_probe(slab_keys, slab_vals, slab_meta, slab_csum,
 
 def ref_murmur32(words: jnp.ndarray, seed: int) -> jnp.ndarray:
     return murmur32_words(words, seed)
+
+
+def ref_stencil_keys(
+    x: jnp.ndarray, sig_digits: int, key_words: int, *,
+    radius: int = 1, coarse_tier: bool = True,
+    n_buckets: int = 1024, n_probe: int = 6,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Oracle for the fused stencil kernel: neighborhood keys via the
+    production ``core.neighbors`` path + per-key probe-window bases.
+
+    Returns (keys (n, M, KW) uint32, base (n, M) int32) — the kernel must
+    match both outputs bit-for-bit."""
+    keys, _points = stencil_keys(x, sig_digits, key_words,
+                                 radius=radius, coarse_tier=coarse_tier)
+    n, m, kw = keys.shape
+    _hi, lo = hash64(keys.reshape(n * m, kw))
+    base = base_bucket(lo, n_buckets, n_probe).reshape(n, m)
+    return keys, base
 
 
 def ref_local_attention(q, k, v, *, window: int, causal: bool = True):

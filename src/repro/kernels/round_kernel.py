@@ -13,18 +13,16 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.neighbors import round_significant
+
 BLOCK_R = 8
 BLOCK_C = 128
 
 
 def _round_kernel(x_ref, out_ref, *, sig_digits: int):
-    x = x_ref[...]
-    absx = jnp.abs(x)
-    safe = jnp.where(absx > 0, absx, 1.0)
-    exp = jnp.floor(jnp.log10(safe))
-    scale = jnp.power(jnp.float32(10.0), (sig_digits - 1) - exp)
-    out = jnp.round(x * scale) / scale
-    out_ref[...] = jnp.where(absx > 0, out, 0.0)
+    # the canonical lattice projection runs unchanged inside the kernel
+    # (zeros/denormals -> 0, inf/nan pass through, pow10(±e) rescale)
+    out_ref[...] = round_significant(x_ref[...], sig_digits)
 
 
 @functools.partial(jax.jit, static_argnames=("sig_digits", "interpret"))

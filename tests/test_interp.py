@@ -1,0 +1,332 @@
+"""Neighborhood-query & interpolation engine (DESIGN.md §6): stencil
+enumeration, batched multi-key reads, IDW + tolerance gates, provenance."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    DHTConfig,
+    InterpConfig,
+    PROV_EXACT,
+    PROV_INTERP,
+    PROV_MISS,
+    SurrogateConfig,
+    dht_create,
+    dht_occupancy,
+    dht_read,
+    dht_read_many,
+    dht_read_many_dual,
+    dht_write,
+    lookup_interpolate_or_compute,
+    lookup_or_compute,
+    lookup_or_interpolate,
+    round_significant,
+    store,
+    surrogate_create,
+)
+from repro.core import neighbors
+
+
+def _compute(v):
+    return jnp.concatenate([v * 2.0, v[:, :3]], axis=-1)
+
+
+def _scfg(sig=3, shards=4):
+    return SurrogateConfig(n_inputs=10, n_outputs=13, sig_digits=sig,
+                           dht=DHTConfig(n_shards=shards,
+                                         buckets_per_shard=4096))
+
+
+# ---------------------------------------------------------------------------
+# round_significant edge cases (the lattice projection must be total)
+# ---------------------------------------------------------------------------
+
+def test_round_significant_negatives_mirror_positives():
+    x = jnp.asarray([1.2345, 678.9, 0.0004567], jnp.float32)
+    pos = np.asarray(round_significant(x, 3))
+    neg = np.asarray(round_significant(-x, 3))
+    np.testing.assert_array_equal(neg, -pos)
+
+
+def test_round_significant_denormals_flush_to_zero():
+    x = jnp.asarray([1e-40, -1e-39, 5e-45, 0.0], jnp.float32)
+    out = np.asarray(round_significant(x, 4))
+    np.testing.assert_array_equal(out, np.zeros(4, np.float32))
+
+
+def test_round_significant_nonfinite_pass_through():
+    x = jnp.asarray([np.inf, -np.inf, np.nan, 1.5], jnp.float32)
+    out = np.asarray(round_significant(x, 3))
+    assert out[0] == np.inf and out[1] == -np.inf
+    assert np.isnan(out[2])
+    assert out[3] == np.float32(1.5)
+
+
+def test_round_significant_one_digit():
+    x = jnp.asarray([123.456, 0.0878, -950.0, 4.4, -850.0], jnp.float32)
+    out = np.asarray(round_significant(x, 1))
+    # halves round to even at one digit: -9.5 -> -10, -8.5 -> -8
+    np.testing.assert_allclose(out, [100.0, 0.09, -1000.0, 4.0, -800.0],
+                               rtol=1e-6)
+
+
+def test_round_significant_jit_eager_bitwise_equal():
+    """jit and eager must agree bitwise or the lattice silently splits."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.uniform(-1e4, 1e4, size=(512,)), jnp.float32)
+    for sig in (1, 3, 6):
+        a = np.asarray(round_significant(x, sig))
+        b = np.asarray(jax.jit(lambda v, s=sig: round_significant(v, s))(x))
+        np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# stencil enumeration
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("radius", [1, 2])
+@pytest.mark.parametrize("coarse", [True, False])
+def test_stencil_count_and_interior_uniqueness(radius, coarse):
+    d = 4
+    # interior points: mid-decade values, no rounding boundary in reach
+    x = jnp.asarray([[5.55, 2.34, 7.77, 3.33]], jnp.float32)
+    keys, points = neighbors.stencil_keys(x, 3, 8, radius=radius,
+                                          coarse_tier=coarse)
+    m = neighbors.n_stencil(d, radius, coarse)
+    assert keys.shape == (1, m, 8)
+    mask = np.asarray(neighbors.dedup_mask(keys))[0]
+    star = 1 + 2 * radius * d
+    # the center + star points are all distinct in the interior; only the
+    # coarse-tier point may collide (with the center, for already-coarse x)
+    assert mask[:star].all()
+
+
+def test_stencil_points_are_lattice_fixed_points():
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.uniform(0.1, 900.0, size=(64, 6)), jnp.float32)
+    _keys, points = neighbors.stencil_keys(x, 3, 12, radius=2)
+    rounded = round_significant(points.reshape(-1, 6), 3)
+    np.testing.assert_array_equal(np.asarray(points).reshape(-1, 6),
+                                  np.asarray(rounded))
+
+
+def test_stencil_boundary_duplicates_are_masked():
+    # 9.99 + 1 step crosses the decade: re-rounding collapses entries
+    x = jnp.asarray([[9.99, 1.0, 1.0, 1.0]], jnp.float32)
+    keys, points = neighbors.stencil_keys(x, 3, 8, radius=2)
+    mask = np.asarray(neighbors.dedup_mask(keys))[0]
+    k = np.asarray(keys)[0]
+    uniq = {k[j].tobytes() for j in range(k.shape[0])}
+    assert mask.sum() == len(uniq)          # mask keeps exactly the distinct
+    assert mask[0]                          # center always survives
+
+
+def test_lattice_step_matches_rounding_resolution():
+    x = jnp.asarray([0.123, 1.23, 12.3, 123.0, 0.0], jnp.float32)
+    step = np.asarray(neighbors.lattice_step(x, 3))
+    np.testing.assert_allclose(step[:4], [0.001, 0.01, 0.1, 1.0], rtol=1e-6)
+    assert step[4] == np.float32(0.01)      # zero steps at unit scale
+
+
+# ---------------------------------------------------------------------------
+# batched multi-key reads
+# ---------------------------------------------------------------------------
+
+def test_dht_read_many_matches_flat_reads():
+    cfg = DHTConfig(n_shards=4, buckets_per_shard=2048)
+    st = dht_create(cfg)
+    rng = np.random.default_rng(0)
+    keys = jnp.asarray(rng.integers(0, 2**31, size=(96, 20)), jnp.uint32)
+    vals = jnp.asarray(rng.integers(0, 2**31, size=(96, 26)), jnp.uint32)
+    st, _ = dht_write(st, keys, vals)
+    many = keys.reshape(24, 4, 20)
+    st, v_m, f_m, s = dht_read_many(st, many)
+    st, v_f, f_f, _ = dht_read(st, keys)
+    np.testing.assert_array_equal(np.asarray(v_m).reshape(96, 26),
+                                  np.asarray(v_f))
+    np.testing.assert_array_equal(np.asarray(f_m).reshape(96), np.asarray(f_f))
+    assert int(s["hits"]) == 96
+
+
+def test_dht_read_many_respects_valid_mask():
+    cfg = DHTConfig(n_shards=2, buckets_per_shard=1024)
+    st = dht_create(cfg)
+    rng = np.random.default_rng(1)
+    keys = jnp.asarray(rng.integers(0, 2**31, size=(32, 20)), jnp.uint32)
+    vals = jnp.asarray(rng.integers(0, 2**31, size=(32, 26)), jnp.uint32)
+    st, _ = dht_write(st, keys, vals)
+    many = keys.reshape(8, 4, 20)
+    valid = jnp.zeros((8, 4), bool).at[:, 0].set(True)
+    st, _v, f, s = dht_read_many(st, many, valid)
+    f = np.asarray(f)
+    assert f[:, 0].all() and not f[:, 1:].any()
+    assert int(s["hits"]) == 8
+
+
+def test_dht_read_many_dual_sees_both_epochs():
+    """Mid-migration, stencil probes must find entries wherever they live."""
+    cfg = DHTConfig(n_shards=4, buckets_per_shard=2048)
+    rng = np.random.default_rng(2)
+    keys = jnp.asarray(rng.integers(0, 2**31, size=(64, 20)), jnp.uint32)
+    vals = jnp.asarray(rng.integers(0, 2**31, size=(64, 26)), jnp.uint32)
+    new = dht_create(cfg)
+    prev = dht_create(cfg)
+    new, _ = dht_write(new, keys[:32], vals[:32])     # already migrated
+    prev, _ = dht_write(prev, keys[32:], vals[32:])   # still in flight
+    many = keys.reshape(16, 4, 20)
+    new, prev, v, f, s = dht_read_many_dual(new, prev, many)
+    assert bool(np.asarray(f).all())
+    np.testing.assert_array_equal(np.asarray(v).reshape(64, 26),
+                                  np.asarray(vals))
+    assert int(s["hits_old_epoch"]) == 32
+
+
+# ---------------------------------------------------------------------------
+# lookup_or_interpolate: provenance + tolerance gates
+# ---------------------------------------------------------------------------
+
+def _bracketed_setup(scfg, n=32, seed=0):
+    """Store the ±1-step lattice neighbors (dim 0) of n query centers,
+    NOT the centers themselves -> every query is a bracketed near-miss."""
+    rng = np.random.default_rng(seed)
+    base = jnp.asarray(rng.uniform(1.5, 9.5, size=(n, 10)), jnp.float32)
+    center = np.asarray(round_significant(base, scfg.sig_digits))
+    step = np.asarray(neighbors.lattice_step(
+        jnp.asarray(center), scfg.sig_digits))
+    st = surrogate_create(scfg)
+    for k in (-1, 1):
+        p = center.copy()
+        p[:, 0] += k * step[:, 0]
+        pj = jnp.asarray(p, jnp.float32)
+        st, _ = store(scfg, st, pj, _compute(pj))
+    return st, jnp.asarray(center, jnp.float32)
+
+
+def test_interpolate_bracketed_near_misses():
+    scfg = _scfg()
+    st, centers = _bracketed_setup(scfg)
+    st, out, prov, stats = lookup_or_interpolate(scfg, st, centers,
+                                                 InterpConfig(radius=1))
+    prov = np.asarray(prov)
+    assert (prov == PROV_INTERP).all()
+    truth = np.asarray(_compute(centers))
+    err = np.abs(np.asarray(out) - truth) / (np.abs(truth) + 1e-9)
+    assert err.max() < 0.05                 # rounding-scale model error
+    assert int(stats["interpolated"]) == centers.shape[0]
+
+
+def test_exact_hit_returns_stored_value_bitwise():
+    scfg = _scfg()
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.uniform(0.5, 9.5, size=(48, 10)), jnp.float32)
+    st = surrogate_create(scfg)
+    st, _ = store(scfg, st, x, _compute(x))
+    st, out, prov, _ = lookup_or_interpolate(scfg, st, x, InterpConfig())
+    assert (np.asarray(prov) == PROV_EXACT).all()
+    # exact provenance returns the cached value bitwise, not a blend
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(_compute(x)))
+
+
+def test_empty_table_is_all_misses():
+    scfg = _scfg()
+    st = surrogate_create(scfg)
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.uniform(0.5, 9.5, size=(16, 10)), jnp.float32)
+    st, out, prov, _ = lookup_or_interpolate(scfg, st, x)
+    assert (np.asarray(prov) == PROV_MISS).all()
+    np.testing.assert_array_equal(np.asarray(out), 0.0)
+
+
+def test_min_neighbors_gate_blocks_single_sided():
+    scfg = _scfg()
+    rng = np.random.default_rng(6)
+    base = jnp.asarray(rng.uniform(1.5, 9.5, size=(24, 10)), jnp.float32)
+    center = np.asarray(round_significant(base, 3))
+    step = np.asarray(neighbors.lattice_step(jnp.asarray(center), 3))
+    st = surrogate_create(scfg)
+    p = center.copy()
+    p[:, 0] += step[:, 0]                  # only ONE neighbor cached
+    pj = jnp.asarray(p, jnp.float32)
+    st, _ = store(scfg, st, pj, _compute(pj))
+    cj = jnp.asarray(center, jnp.float32)
+    st, _o, prov2, _ = lookup_or_interpolate(
+        scfg, st, cj, InterpConfig(min_neighbors=2))
+    assert (np.asarray(prov2) == PROV_MISS).all()
+    st, _o, prov1, _ = lookup_or_interpolate(
+        scfg, st, cj, InterpConfig(min_neighbors=1))
+    assert (np.asarray(prov1) == PROV_INTERP).all()
+
+
+def test_max_neighbor_dist_gate():
+    scfg = _scfg()
+    st, centers = _bracketed_setup(scfg, seed=7)
+    # neighbors sit exactly 1 step away: a sub-step gate rejects them
+    st, _o, prov, _ = lookup_or_interpolate(
+        scfg, st, centers, InterpConfig(max_neighbor_dist=0.5))
+    assert (np.asarray(prov) == PROV_MISS).all()
+
+
+# ---------------------------------------------------------------------------
+# compute wrappers
+# ---------------------------------------------------------------------------
+
+def test_lookup_or_compute_full_hit_skips_compute_fn():
+    scfg = _scfg()
+    st = surrogate_create(scfg)
+    rng = np.random.default_rng(8)
+    x = jnp.asarray(rng.uniform(0.5, 9.5, size=(32, 10)), jnp.float32)
+    calls = []
+
+    def counting(v):
+        calls.append(1)
+        return _compute(v)
+
+    st, _, found, _ = lookup_or_compute(scfg, st, x, counting)
+    assert len(calls) == 1 and not bool(found.any())
+    st, out, found, s = lookup_or_compute(scfg, st, x, counting)
+    assert bool(found.all())
+    assert len(calls) == 1, "full-hit host path must skip compute_fn"
+    assert int(s["stored"]) == 0
+
+
+def test_lookup_interpolate_or_compute_stores_only_exact_results():
+    scfg = _scfg()
+    st, centers = _bracketed_setup(scfg, seed=9)
+    calls = []
+
+    def counting(v):
+        calls.append(1)
+        return _compute(v)
+
+    # every row interpolates -> compute skipped, nothing stored
+    st, out, prov, s = lookup_interpolate_or_compute(
+        scfg, st, centers, counting, InterpConfig(radius=1))
+    assert (np.asarray(prov) == PROV_INTERP).all()
+    assert len(calls) == 0 and int(s["stored"]) == 0
+    # a second query of the same centers still interpolates (not published)
+    st, _, prov2, _ = lookup_or_interpolate(scfg, st, centers,
+                                            InterpConfig(radius=1))
+    assert (np.asarray(prov2) == PROV_INTERP).all()
+    # true misses pay compute and get published
+    rng = np.random.default_rng(10)
+    far = jnp.asarray(rng.uniform(20.0, 90.0, size=(16, 10)), jnp.float32)
+    st, _, prov3, s3 = lookup_interpolate_or_compute(
+        scfg, st, far, counting, InterpConfig(radius=1))
+    assert (np.asarray(prov3) == PROV_MISS).all()
+    assert len(calls) == 1 and int(s3["stored"]) == 16
+
+
+def test_dht_occupancy_counts():
+    cfg = DHTConfig(n_shards=4, buckets_per_shard=1024)
+    st = dht_create(cfg)
+    rng = np.random.default_rng(11)
+    keys = jnp.asarray(rng.integers(0, 2**31, size=(128, 20)), jnp.uint32)
+    vals = jnp.asarray(rng.integers(0, 2**31, size=(128, 26)), jnp.uint32)
+    st, ws = dht_write(st, keys, vals)
+    occ = dht_occupancy(st)
+    landed = int(ws["inserted"]) + int(ws["updated"]) + int(ws["evicted"])
+    assert int(np.sum(np.asarray(occ["occupied_per_shard"]))) >= landed - int(ws["evicted"])
+    assert int(np.sum(np.asarray(occ["invalid_per_shard"]))) == 0
+    assert 0.0 < float(occ["load_factor"]) < 1.0
+    assert occ["live_per_shard"].shape == (4,)

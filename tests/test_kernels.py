@@ -127,6 +127,41 @@ def test_local_attention_kernel_matches_oracle(bh, s, d, w, bq, bk):
                                atol=2e-5, rtol=2e-5)
 
 
+@pytest.mark.parametrize("radius", [1, 2])
+@pytest.mark.parametrize("coarse", [True, False])
+@pytest.mark.parametrize("n,d", [(1, 4), (37, 10), (80, 6)])
+def test_stencil_kernel_matches_oracle_bitwise(radius, coarse, n, d):
+    """Packed neighborhood keys + probe-window bases must agree bit-for-bit
+    with the production jnp path — an ulp of drift splits the lattice."""
+    rng = np.random.default_rng(n * 7 + d)
+    x = jnp.asarray(rng.uniform(0.2, 950.0, size=(n, d)), jnp.float32)
+    k_k, b_k = ops.stencil_keys(x, 3, 20, radius=radius, coarse_tier=coarse,
+                                n_buckets=4096, n_probe=6)
+    k_r, b_r = ref.ref_stencil_keys(x, 3, 20, radius=radius,
+                                    coarse_tier=coarse,
+                                    n_buckets=4096, n_probe=6)
+    np.testing.assert_array_equal(np.asarray(k_k), np.asarray(k_r))
+    np.testing.assert_array_equal(np.asarray(b_k), np.asarray(b_r))
+
+
+def test_stencil_kernel_edge_values_bitwise():
+    x = jnp.asarray([[0.0, -5.5, 1e-40, 3.14159, -0.001, 7e4, 1.0, 9.99,
+                      0.5, 2.5]], jnp.float32)
+    for sig in (1, 3, 6):
+        k_k, b_k = ops.stencil_keys(x, sig, 20)
+        k_r, b_r = ref.ref_stencil_keys(x, sig, 20)
+        np.testing.assert_array_equal(np.asarray(k_k), np.asarray(k_r))
+        np.testing.assert_array_equal(np.asarray(b_k), np.asarray(b_r))
+
+
+def test_round_kernel_nonfinite_matches_oracle_bitwise():
+    x = jnp.asarray([np.inf, -np.inf, np.nan, 1e-40, -1e-39, 0.0, 1.5],
+                    jnp.float32)
+    out = np.asarray(ops.round_sig(x, 3))
+    expect = np.asarray(ref.ref_round_sig(x, 3))
+    np.testing.assert_array_equal(out.view(np.uint32), expect.view(np.uint32))
+
+
 def test_byte_window_vs_contiguous_probe_hit_parity():
     """The TPU adaptation (contiguous window) must find what it stored,
     same as the paper's byte-window scheme does for its own layout."""
