@@ -1,14 +1,43 @@
-"""Paper Fig. 6: mixed 95% read / 5% write workload, uniform and zipfian."""
+"""Paper Fig. 6: mixed 95% read / 5% write workload, uniform and zipfian.
+
+The mixed workload is exactly what the one-round op-engine (DESIGN.md §8)
+is for: the whole read+write batch rides ONE ``dispatch``/``collect``
+cycle instead of a write round followed by a read round.  Each row
+reports the measured throughput of the engine path plus the collective
+rounds per batch of the legacy two-round schedule vs the engine
+(``rounds_legacy``/``rounds_engine``, counted by tracing both programs
+through ``routing.round_count``) — the perf-trajectory JSON captures the
+round-halving directly.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import DHTConfig, dht_create, dht_read, dht_write
+from repro.core import (
+    DHTConfig,
+    OP_READ,
+    OP_WRITE,
+    dht_create,
+    dht_execute,
+    dht_read,
+    dht_write,
+    mixed_ops,
+)
+from repro.core import routing
 from repro.core.layout import MODES
 
 from .common import PAPER_RANKS, Row, make_keys_vals, modeled_ops, time_fn
+
+
+def _count_rounds(fn, *args) -> int:
+    """Collective rounds of one traced execution of ``fn``.  A fresh
+    lambda wrapper defeats jit's trace cache (a function object jit
+    already traced would not re-run its Python body, reporting 0)."""
+    routing.reset_round_count()
+    jax.make_jaxpr(lambda *a: fn(*a))(*args)
+    return routing.round_count()
 
 
 def run(quick: bool = True):
@@ -24,12 +53,21 @@ def run(quick: bool = True):
                             mode=mode, capacity=max(n_ops // shards, 64))
 
             read_mask = jnp.asarray(is_read)
+            op = jnp.where(read_mask, OP_READ, OP_WRITE).astype(jnp.int32)
+            ops_batch = mixed_ops(op, keys, vals)
 
-            @jax.jit
-            def mixed(table):
+            def mixed_fn(table):
+                table, _, val, found, code, es = dht_execute(
+                    table, ops_batch, kinds=("read", "write"))
+                return table, val, found, code, es
+
+            mixed = jax.jit(mixed_fn)
+
+            def legacy(table):
+                # pre-engine schedule: one write round then one read round
                 table, w = dht_write(table, keys, vals, valid=~read_mask)
                 table, _, found, r = dht_read(table, keys, valid=read_mask)
-                return table, w, r
+                return table, found, w, r
 
             def once():
                 t = dht_create(cfg)
@@ -38,16 +76,22 @@ def run(quick: bool = True):
                 t, _ = dht_write(t, keys, vals)
                 return mixed(t)
 
-            t_m, (_, wstats, rstats) = time_fn(once, iters=2, warmup=1)
-            rounds = float(wstats["rounds"])
+            t_m, (_, _val, found, code, es) = time_fn(once, iters=2, warmup=1)
+            t0 = dht_create(cfg)
+            rounds_legacy = _count_rounds(legacy, t0)
+            rounds_engine = _count_rounds(mixed_fn, t0)
+            wrounds = float(es["rounds"])
             rts = 0.95 * (1 if mode == "lockfree" else 3) + 0.05 * (
-                2 if mode == "lockfree" else 2 + 2 * max(rounds, 1))
+                2 if mode == "lockfree" else 2 + 2 * max(wrounds, 1))
             rows.append(Row(
                 f"fig6/{dist}/mixed95r5w/{mode}",
                 t_m / n_ops * 1e6,
                 f"measured_mops={n_ops / t_m / 1e6:.3f};"
                 f"modeled_mops_640={modeled_ops(PAPER_RANKS, rts) / 1e6:.2f};"
-                f"write_rounds={rounds:.0f}",
+                f"rounds_legacy={rounds_legacy};"
+                f"rounds_engine={rounds_engine};"
+                f"round_ratio={rounds_legacy / max(rounds_engine, 1):.1f};"
+                f"write_rounds={wrounds:.0f}",
             ))
     return rows
 

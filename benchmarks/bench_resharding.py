@@ -63,18 +63,18 @@ def run(quick: bool = True):
     # post-resize serving throughput on the grown table
     read = jax.jit(lambda t, k: dht_read(t, k))
     t_r, _ = time_fn(lambda: read(st, keys), iters=2)
-    rows.append(Row(f"reshard/post_grow_read", t_r / n * 1e6,
+    rows.append(Row("reshard/post_grow_read", t_r / n * 1e6,
                     f"measured_mops={n / t_r / 1e6:.3f}"))
     write = jax.jit(lambda t, k, v: dht_write(t, k, v))
     t_w, _ = time_fn(lambda: write(st, keys, vals), iters=2)
-    rows.append(Row(f"reshard/post_grow_write", t_w / n * 1e6,
+    rows.append(Row("reshard/post_grow_write", t_w / n * 1e6,
                     f"measured_mops={n / t_w / 1e6:.3f}"))
 
     # shrink back 2S -> S
     st = _migration(lambda: dht_resize(st, s, batch=batch),
                     f"shrink/{2 * s}to{s}", rows)
     t_r, _ = time_fn(lambda: read(st, keys), iters=2)
-    rows.append(Row(f"reshard/post_shrink_read", t_r / n * 1e6,
+    rows.append(Row("reshard/post_shrink_read", t_r / n * 1e6,
                     f"measured_mops={n / t_r / 1e6:.3f}"))
 
     # single-shard leave (failure/drain: ~1/S of the table moves)

@@ -32,12 +32,11 @@ from repro.core import (
     DHTConfig,
     InterpConfig,
     PROV_EXACT,
-    PROV_INTERP,
     PROV_MISS,
     SurrogateConfig,
     lookup_or_interpolate,
 )
-from repro.core.layout import dht_create, pack_floats, unpack_floats
+from repro.core.layout import dht_create, pack_floats
 from repro.core.surrogate import make_keys
 from repro.core import dht_read, dht_write
 
@@ -210,9 +209,8 @@ def run_simulation(cfg: PoetConfig, use_dht: bool = True,
 
     # warm the compiled paths: the paper's 500-step production runs amortize
     # XLA compilation; one-time compiles are excluded from the comparison
-    warm_state = advect(state, cfg.nx, cfg.ny, cfg.vx, cfg.vy,
-                        cfg.inj_mg, cfg.inj_cl)
-    del warm_state
+    advect(state, cfg.nx, cfg.ny, cfg.vx, cfg.vy,
+           cfg.inj_mg, cfg.inj_cl)
     if use_dht:
         wk = jnp.zeros((READ_BUCKET, N_IN), jnp.float32)
         if cfg.use_interp:

@@ -8,7 +8,7 @@ import dataclasses
 
 import jax
 
-from repro.configs import get_config, reduced
+from repro.configs import get_config
 from repro.data import DataConfig
 from repro.models.config import ATTN
 from repro.optim import AdamWConfig

@@ -18,7 +18,6 @@ future-work item, implemented.
 """
 from __future__ import annotations
 
-import dataclasses
 import json
 import os
 import shutil

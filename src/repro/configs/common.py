@@ -6,7 +6,6 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.models import config as C
 from repro.models.config import ModelConfig
 
 

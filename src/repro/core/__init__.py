@@ -14,15 +14,26 @@ from .layout import (  # noqa: F401
 )
 from .layout import with_ring  # noqa: F401
 from .dht import (  # noqa: F401
+    OP_MIGRATE,
+    OP_READ,
+    OP_WRITE,
+    OpBatch,
     W_DROPPED,
     W_EVICT,
     W_INSERT,
+    W_SKIP,
     W_UPDATE,
+    dht_execute,
     dht_read,
     dht_read_dual,
     dht_read_many,
     dht_read_many_dual,
     dht_write,
+    dual_fusable,
+    migrate_ops,
+    mixed_ops,
+    read_ops,
+    write_ops,
 )
 from .neighbors import (  # noqa: F401
     dedup_mask,

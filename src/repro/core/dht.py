@@ -16,284 +16,44 @@ serialization schedules (DESIGN.md §2):
   per *shard* per round (exclusive writers); readers admit concurrently
   (shared lock) but only after all writer rounds drain.
 
-Both a single-device ("virtual shards") and a shard_map/all_to_all backend
-are provided; the math is identical (see ``core/routing.py``).
+Every public operation here is a thin wrapper over the unified one-round
+op-engine (``core/op_engine.dht_execute``, DESIGN.md §8): requests are
+op-tagged records, an arbitrary read/write/migrate mix dispatches in one
+``all_to_all`` cycle, and a dual-epoch read fans each key out to its new-
+and old-epoch owners inside the *same* round instead of two sequential
+reads.  Both a single-device ("virtual shards") and a
+shard_map/all_to_all backend are provided; the math is identical
+(see ``core/routing.py``).
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Any
 
-import jax
 import jax.numpy as jnp
 
 from . import routing
-from .hashing import (
-    base_bucket,
-    checksum32,
-    hash64,
-    owner_shard,
-    probe_indices,
-    ring_owner,
+from .layout import DHTConfig, DHTState
+from .op_engine import (
+    OP_MIGRATE,
+    OP_READ,
+    OP_WRITE,
+    OpBatch,
+    W_DROPPED,
+    W_EVICT,
+    W_INSERT,
+    W_SKIP,
+    W_UPDATE,
+    dht_execute,
+    dual_fusable,
+    migrate_ops,
+    mixed_ops,
+    read_ops,
+    write_ops,
 )
-from .layout import (
-    GEN_SHIFT,
-    INVALID,
-    MODE_COARSE,
-    MODE_FINE,
-    MODE_LOCKFREE,
-    OCCUPIED,
-    DHTConfig,
-    DHTState,
-)
-
-# per-item write result codes
-W_DROPPED = 0   # routing overflow — not applied (cache-miss semantics)
-W_INSERT = 1
-W_UPDATE = 2
-W_EVICT = 3     # probe window exhausted -> overwrote last candidate (paper policy)
 
 
-def _conflict_rank(group: jnp.ndarray, valid: jnp.ndarray) -> jnp.ndarray:
-    """Rank of each valid item among items of the same conflict group
-    (stable in item order).  O(C log C), no group-sized tensors."""
-    c = group.shape[0]
-    iota = jnp.arange(c, dtype=jnp.int32)
-    g = jnp.where(valid, group.astype(jnp.int32), jnp.int32(2**30))
-    order = jnp.argsort(g, stable=True)
-    gs = g[order]
-    new_run = jnp.concatenate([jnp.ones((1,), bool), gs[1:] != gs[:-1]])
-    run_start = jax.lax.cummax(jnp.where(new_run, iota, 0))
-    rank_sorted = iota - run_start
-    rank = jnp.zeros((c,), jnp.int32).at[order].set(rank_sorted)
-    return jnp.where(valid, rank, 0)
-
-
-def _gather_window(slab: dict[str, jnp.ndarray], idx: jnp.ndarray):
-    """Gather the (C, P) probe windows from a shard slab."""
-    return {
-        "keys": slab["keys"][idx],   # (C, P, KW)
-        "vals": slab["vals"][idx],   # (C, P, VW)
-        "meta": slab["meta"][idx],   # (C, P)
-        "csum": slab["csum"][idx],   # (C, P)
-    }
-
-
-def _choose_write_slot(cfg: DHTConfig, win, keys):
-    """Paper §3.1 probe policy: same key -> update; else first writable
-    (empty or invalid); else overwrite the last candidate."""
-    occupied = (win["meta"] & OCCUPIED) != 0
-    invalid = (win["meta"] & INVALID) != 0
-    keymatch = jnp.all(win["keys"] == keys[:, None, :], axis=-1) & occupied
-    writable = (~occupied) | invalid
-    has_match = jnp.any(keymatch, axis=-1)
-    has_empty = jnp.any(writable, axis=-1)
-    first_match = jnp.argmax(keymatch, axis=-1).astype(jnp.int32)
-    first_empty = jnp.argmax(writable, axis=-1).astype(jnp.int32)
-    sel = jnp.where(
-        has_match, first_match,
-        jnp.where(has_empty, first_empty, jnp.int32(cfg.n_probe - 1)),
-    )
-    return sel, has_match, has_empty
-
-
-def _write_pass(cfg: DHTConfig, slab, base, keys, vals, active):
-    """One probe-and-publish pass (== one MPI_Get + MPI_Put round trip in
-    the paper's write).  Simultaneous writers on one bucket resolve
-    deterministically: highest item index wins ("last writer wins",
-    reproducibly)."""
-    c = base.shape[0]
-    b = cfg.buckets_per_shard
-    idx = probe_indices(base, cfg.n_probe)          # (C, P)
-    win = _gather_window(slab, idx)
-    sel, has_match, has_empty = _choose_write_slot(cfg, win, keys)
-    slot = base + sel                                # (C,) absolute bucket
-    iota = jnp.arange(c, dtype=jnp.int32)
-
-    # deterministic winner per slot
-    prio = jnp.where(active, iota, jnp.int32(-1))
-    winner = jnp.full((b,), -1, jnp.int32).at[
-        jnp.where(active, slot, b)
-    ].max(prio, mode="drop")
-    is_winner = active & (winner[slot] == prio)
-    wslot = jnp.where(is_winner, slot, b)            # b = dropped row
-
-    old_gen = slab["meta"][slot] >> GEN_SHIFT
-    new_meta = jnp.uint32(OCCUPIED) | ((old_gen + 1) << GEN_SHIFT)
-    new_csum = checksum32(keys, vals)
-
-    slab = dict(slab)
-    slab["keys"] = slab["keys"].at[wslot].set(keys, mode="drop")
-    slab["vals"] = slab["vals"].at[wslot].set(vals, mode="drop")
-    slab["meta"] = slab["meta"].at[wslot].set(new_meta, mode="drop")
-    slab["csum"] = slab["csum"].at[wslot].set(new_csum, mode="drop")
-
-    kind = jnp.where(
-        has_match, W_UPDATE, jnp.where(has_empty, W_INSERT, W_EVICT)
-    ).astype(jnp.int32)
-    # an item is settled when its key now sits at its chosen slot (it won, or
-    # a same-key duplicate with higher index won — correct last-writer-wins);
-    # losers to a *different* key re-probe, exactly like the paper's write
-    # loop finding the bucket taken and moving to the next candidate.
-    stored = slab["keys"][slot]
-    same_key = jnp.all(stored == keys, axis=-1)
-    retry = active & ~same_key & (kind != W_EVICT)
-    return slab, kind, retry
-
-
-def _apply_writes(cfg: DHTConfig, slab, base, keys, vals, valid):
-    """Probe-loop write for one shard: bounded retry passes make concurrent
-    inserts land on successive candidates instead of silently losing
-    (paper §3.1 write policy under concurrency).  Returns
-    (slab', per-item code, n_passes)."""
-
-    def body(carry):
-        slab_c, active, code, it = carry
-        slab_n, kind, retry = _write_pass(cfg, slab_c, base, keys, vals, active)
-        code = jnp.where(active, kind, code)
-        return slab_n, retry, code, it + 1
-
-    def cond(carry):
-        _, active, _, it = carry
-        return jnp.any(active) & (it < cfg.n_probe)
-
-    code0 = jnp.zeros(base.shape, jnp.int32)  # W_DROPPED
-    slab, _, code, passes = jax.lax.while_loop(
-        cond, body, (dict(slab), valid, code0, jnp.int32(0))
-    )
-    return slab, code, passes
-
-
-def _apply_reads(cfg: DHTConfig, slab, base, keys, valid):
-    """Vectorized probe + (lock-free) checksum validation for one shard.
-
-    Returns (slab', values, found, mismatches).  In the synchronous SPMD
-    path a re-get returns identical bytes, so a mismatch is treated as
-    persistent after ``max_read_retries`` logical retries and the bucket is
-    flagged INVALID (paper §4.2) — the retry loop does real work in the
-    async host path (``core/async_sim.py``)."""
-    idx = probe_indices(base, cfg.n_probe)
-    win = _gather_window(slab, idx)
-    occupied = (win["meta"] & OCCUPIED) != 0
-    invalid = (win["meta"] & INVALID) != 0
-    keymatch = jnp.all(win["keys"] == keys[:, None, :], axis=-1) & occupied & ~invalid
-    has = jnp.any(keymatch, axis=-1)
-    sel = jnp.argmax(keymatch, axis=-1).astype(jnp.int32)
-    slot = base + sel
-    val = jnp.take_along_axis(
-        win["vals"], sel[:, None, None], axis=1
-    )[:, 0, :]                                        # (C, VW)
-    stored_csum = jnp.take_along_axis(win["csum"], sel[:, None], axis=1)[:, 0]
-
-    if cfg.mode == MODE_LOCKFREE:
-        ok = checksum32(keys, val) == stored_csum
-        mismatch = valid & has & ~ok
-        # flag persistently diverging buckets INVALID so writers may reclaim
-        mslot = jnp.where(mismatch, slot, cfg.buckets_per_shard)
-        slab = dict(slab)
-        slab["meta"] = slab["meta"].at[mslot].set(
-            slab["meta"][slot] | jnp.uint32(INVALID), mode="drop"
-        )
-        found = valid & has & ok
-        n_mismatch = jnp.sum(mismatch).astype(jnp.int32)
-    else:
-        found = valid & has
-        n_mismatch = jnp.int32(0)
-
-    val = jnp.where(found[:, None], val, jnp.uint32(0))
-    return slab, val, found, n_mismatch
-
-
-def _lock_token(axis_name, n_shards: int) -> jnp.ndarray:
-    """One acquire/release round-trip's worth of traffic.  The returned
-    token is threaded into the stats so the collective is not DCE'd."""
-    if axis_name is None:
-        return jnp.int32(1)
-    probe = jnp.ones((n_shards, 1), jnp.int32)
-    out = jax.lax.all_to_all(probe, axis_name, 0, 0)
-    return jnp.sum(out).astype(jnp.int32)
-
-
-def _locked_write_rounds(cfg: DHTConfig, slab, base, keys, vals, valid, axis_name):
-    """fine/coarse modes: serialize conflicting writes into rounds."""
-    if cfg.mode == MODE_FINE:
-        group = base                      # per-bucket lock granularity
-    else:
-        group = jnp.zeros_like(base)      # whole-window lock
-    rank = _conflict_rank(group, valid)
-    rounds = jnp.max(jnp.where(valid, rank, -1)) + 1
-    if axis_name is not None:
-        # uniform trip count across devices — collectives live in the body
-        rounds = jax.lax.pmax(rounds, axis_name)
-
-    code0 = jnp.zeros_like(rank)
-
-    def body(carry):
-        r, slab_c, code_c, tok = carry
-        mask = valid & (rank == r)
-        slab_n, code_r, _passes = _apply_writes(cfg, slab_c, base, keys, vals, mask)
-        code_c = jnp.where(mask, code_r, code_c)
-        # acquire + release traffic per round (2 RTs) — paper §3.5/§4.1
-        tok = tok + _lock_token(axis_name, cfg.n_shards) * 2
-        return r + 1, slab_n, code_c, tok
-
-    def cond(carry):
-        return carry[0] < rounds
-
-    _, slab, code, tok = jax.lax.while_loop(
-        cond, body, (jnp.int32(0), slab, code0, jnp.int32(0))
-    )
-    return slab, code, rounds.astype(jnp.int32), tok
-
-
-def _shard_write(cfg: DHTConfig, slab, base, keys, vals, valid, axis_name):
-    if cfg.mode == MODE_LOCKFREE:
-        slab, code, passes = _apply_writes(cfg, slab, base, keys, vals, valid)
-        return slab, code, passes, jnp.int32(0)
-    return _locked_write_rounds(cfg, slab, base, keys, vals, valid, axis_name)
-
-
-def _shard_read(cfg: DHTConfig, slab, base, keys, valid, axis_name):
-    slab, val, found, n_mm = _apply_reads(cfg, slab, base, keys, valid)
-    if cfg.mode == MODE_LOCKFREE:
-        tok = jnp.int32(0)
-    else:
-        tok = _lock_token(axis_name, cfg.n_shards) * 2  # shared lock RTs
-    return slab, val, found, n_mm, tok
-
-
-# ---------------------------------------------------------------------------
-# public batched API
-# ---------------------------------------------------------------------------
-
-def _route(state: DHTState, keys: jnp.ndarray, axis_name):
-    """Owner placement: static modulo (paper) or consistent-hash ring
-    (elastic membership, DESIGN.md §4).  Ring presence is structural, so
-    jit traces specialize with zero overhead on the legacy path."""
-    cfg = state.cfg
-    h_hi, h_lo = hash64(keys)
-    if state.ring is None:
-        dest = owner_shard(h_hi, cfg.n_shards)
-        epoch = jnp.int32(0)
-    else:
-        r = state.ring
-        dest = ring_owner(h_hi, r.positions, r.owners, r.n_live)
-        epoch = r.epoch
-    base = base_bucket(h_lo, cfg.buckets_per_shard, cfg.n_probe)
-    n = keys.shape[0]
-    cap = cfg.capacity or routing.auto_capacity(n, cfg.n_shards)
-    binned = routing.bin_by_dest(dest, cfg.n_shards, cap, epoch=epoch)
-    return binned, base
-
-
-def _slab_of(state: DHTState):
-    return {"keys": state.keys, "vals": state.vals,
-            "meta": state.meta, "csum": state.csum}
-
-
-def _state_from(state: DHTState, slab) -> DHTState:
-    return DHTState(state.cfg, slab["keys"], slab["vals"], slab["meta"],
-                    slab["csum"], state.ring)
+def _ones(keys: jnp.ndarray) -> jnp.ndarray:
+    return jnp.ones((keys.shape[0],), bool)
 
 
 def dht_write(
@@ -310,45 +70,22 @@ def dht_write(
     sharded backend: call inside shard_map; ``state`` is this device's shard
     (leading dim 1) and ``keys`` the device-local batch.
     """
-    cfg = state.cfg
     if valid is None:
-        valid = jnp.ones((keys.shape[0],), bool)
-    binned, base = _route(state, keys, axis_name)
-    payload_valid = (valid & binned.kept).astype(jnp.int32)
-    inc = routing.dispatch(
-        binned,
-        [base, keys, vals.astype(jnp.uint32), payload_valid],
-        axis_name,
-    )
-    if axis_name is None:
-        # (S, C, ...) incoming — vmap the per-shard handler over shards
-        def handler(slab, b, k, v, m):
-            return _shard_write(cfg, slab, b, k, v, m.astype(bool), None)
-
-        slab = _slab_of(state)
-        slab, code, rounds, tok = jax.vmap(handler)(slab, *inc)
-        rounds = jnp.max(rounds)
-        tok = jnp.sum(tok)
-        (code_back,) = routing.collect(binned, [code], None)
-    else:
-        slab = jax.tree.map(lambda x: x[0], _slab_of(state))
-        slab, code, rounds, tok = _shard_write(
-            cfg, slab, inc[0], inc[1], inc[2], inc[3].astype(bool), axis_name
-        )
-        slab = jax.tree.map(lambda x: x[None], slab)
-        (code_back,) = routing.collect(binned, [code], axis_name)
-    code_back = jnp.where(valid & binned.kept, code_back, W_DROPPED)
+        valid = _ones(keys)
+    state, _, _vals, _found, code, es = dht_execute(
+        state, write_ops(keys, vals, valid), kinds=("write",),
+        axis_name=axis_name)
     stats = {
-        "inserted": jnp.sum(code_back == W_INSERT).astype(jnp.int32),
-        "updated": jnp.sum(code_back == W_UPDATE).astype(jnp.int32),
-        "evicted": jnp.sum(code_back == W_EVICT).astype(jnp.int32),
-        "dropped": binned.n_dropped,
-        "rounds": rounds.astype(jnp.int32),
-        "lock_tokens": tok,
-        "epoch": binned.epoch,
-        "code": code_back,
+        "inserted": jnp.sum(code == W_INSERT).astype(jnp.int32),
+        "updated": jnp.sum(code == W_UPDATE).astype(jnp.int32),
+        "evicted": jnp.sum(code == W_EVICT).astype(jnp.int32),
+        "dropped": es["dropped"],
+        "rounds": es["rounds"],
+        "lock_tokens": es["lock_tokens"],
+        "epoch": es["epoch"],
+        "code": code,
     }
-    return _state_from(state, slab), stats
+    return state, stats
 
 
 def dht_read(
@@ -361,42 +98,19 @@ def dht_read(
     """DHT_read: fetch a batch of values.  Returns (state', vals, found, stats);
     state' differs only in lock-free mode when mismatching buckets get
     flagged INVALID."""
-    cfg = state.cfg
     if valid is None:
-        valid = jnp.ones((keys.shape[0],), bool)
-    binned, base = _route(state, keys, axis_name)
-    payload_valid = (valid & binned.kept).astype(jnp.int32)
-    inc = routing.dispatch(binned, [base, keys, payload_valid], axis_name)
-    if axis_name is None:
-        def handler(slab, b, k, m):
-            return _shard_read(cfg, slab, b, k, m.astype(bool), None)
-
-        slab = _slab_of(state)
-        slab, val, found, n_mm, tok = jax.vmap(handler)(slab, *inc)
-        n_mm, tok = jnp.sum(n_mm), jnp.sum(tok)
-        val_back, found_back = routing.collect(
-            binned, [val, found.astype(jnp.int32)], None
-        )
-    else:
-        slab = jax.tree.map(lambda x: x[0], _slab_of(state))
-        slab, val, found, n_mm, tok = _shard_read(
-            cfg, slab, inc[0], inc[1], inc[2].astype(bool), axis_name
-        )
-        slab = jax.tree.map(lambda x: x[None], slab)
-        val_back, found_back = routing.collect(
-            binned, [val, found.astype(jnp.int32)], axis_name
-        )
-    found_out = (found_back > 0) & valid & binned.kept
-    val_out = jnp.where(found_out[:, None], val_back, jnp.uint32(0))
+        valid = _ones(keys)
+    state, _, vals, found, _code, es = dht_execute(
+        state, read_ops(keys, valid), kinds=("read",), axis_name=axis_name)
     stats = {
-        "hits": jnp.sum(found_out).astype(jnp.int32),
-        "misses": jnp.sum(valid & ~found_out).astype(jnp.int32),
-        "mismatches": n_mm,
-        "dropped": binned.n_dropped,
-        "lock_tokens": tok,
-        "epoch": binned.epoch,
+        "hits": jnp.sum(found).astype(jnp.int32),
+        "misses": jnp.sum(valid & ~found).astype(jnp.int32),
+        "mismatches": es["mismatches"],
+        "dropped": es["dropped"],
+        "lock_tokens": es["lock_tokens"],
+        "epoch": es["epoch"],
     }
-    return _state_from(state, slab), val_out, found_out, stats
+    return state, vals, found, stats
 
 
 def dht_read_many(
@@ -438,9 +152,10 @@ def dht_read_many_dual(
     axis_name: Any = None,
 ) -> tuple[DHTState, DHTState, jnp.ndarray, jnp.ndarray, dict[str, jnp.ndarray]]:
     """Dual-epoch variant of :func:`dht_read_many` — composes neighborhood
-    queries with an in-flight migration (DESIGN.md §5): each flat probe
-    consults the new-epoch owners first, old-epoch owners for the residual
-    misses, so a stencil neighbor mid-move is still found."""
+    queries with an in-flight migration (DESIGN.md §5): every flat probe
+    fans out to its new- and old-epoch owners in the same single dispatch
+    (see :func:`dht_read_dual`), so a stencil neighbor mid-move is still
+    found at no extra round cost."""
     n, m = keys.shape[0], keys.shape[1]
     flat, vflat = routing.flatten_fanout(keys, valid)
     state, prev, val, found, stats = dht_read_dual(
@@ -455,26 +170,17 @@ def dht_read_many_dual(
     )
 
 
-def dht_read_dual(
+def _dht_read_dual_seq(
     state: DHTState,
     prev: DHTState,
     keys: jnp.ndarray,
-    valid: jnp.ndarray | None = None,
+    valid: jnp.ndarray,
     *,
     axis_name: Any = None,
-) -> tuple[DHTState, DHTState, jnp.ndarray, jnp.ndarray, dict[str, jnp.ndarray]]:
-    """Dual-epoch read during an online migration (DESIGN.md §5).
-
-    Between ``migration_begin`` and ``migration_finish`` an entry lives in
-    exactly one of two tables: the new-epoch table ``state`` (already moved,
-    or freshly written) or the previous-epoch table ``prev`` (not yet
-    moved).  Probe the new owners first, then fall back to the old owners
-    for the residual misses — a hit can therefore never be lost mid-move.
-
-    Returns ``(state', prev', vals, found, stats)``.
-    """
-    if valid is None:
-        valid = jnp.ones((keys.shape[0],), bool)
+):
+    """Sequential two-round dual read — fallback when the two epochs'
+    geometries cannot share one dispatch (``dual_fusable`` is False, e.g.
+    a rebuild migration that changed word widths or probe-window size)."""
     state, val_new, found_new, s_new = dht_read(
         state, keys, valid, axis_name=axis_name
     )
@@ -496,16 +202,85 @@ def dht_read_dual(
     return state, prev, vals, found, stats
 
 
+def dht_read_dual(
+    state: DHTState,
+    prev: DHTState,
+    keys: jnp.ndarray,
+    valid: jnp.ndarray | None = None,
+    *,
+    axis_name: Any = None,
+) -> tuple[DHTState, DHTState, jnp.ndarray, jnp.ndarray, dict[str, jnp.ndarray]]:
+    """Dual-epoch read during an online migration (DESIGN.md §5/§8).
+
+    Between ``migration_begin`` and ``migration_finish`` an entry lives in
+    exactly one of two tables: the new-epoch table ``state`` (already moved,
+    or freshly written) or the previous-epoch table ``prev`` (not yet
+    moved).  Each key fans out to BOTH owners inside one dispatch
+    (``routing.flatten_fanout`` with an epoch-select lane): the new-epoch
+    reply is authoritative, the old-epoch reply backfills entries still in
+    flight — a hit can therefore never be lost mid-move, and the whole
+    migration window costs one collective round per read batch instead of
+    two sequential ones.
+
+    Returns ``(state', prev', vals, found, stats)``.
+    """
+    if valid is None:
+        valid = _ones(keys)
+    if not dual_fusable(state.cfg, prev.cfg):
+        return _dht_read_dual_seq(state, prev, keys, valid,
+                                  axis_name=axis_name)
+    n = keys.shape[0]
+    fan = jnp.broadcast_to(keys[:, None, :], (n, 2) + keys.shape[1:])
+    vfan = jnp.broadcast_to(valid[:, None], (n, 2))
+    flat, vflat = routing.flatten_fanout(fan, vfan)
+    esel = jnp.tile(jnp.arange(2, dtype=jnp.int32), n)
+    cap = state.cfg.capacity
+    state, prev, val, found, _code, es = dht_execute(
+        state,
+        OpBatch(keys=flat, valid=vflat, esel=esel),
+        kinds=("read",),
+        prev=prev,
+        axis_name=axis_name,
+        capacity=(2 * cap if cap else None),
+    )
+    val2 = routing.unflatten_fanout(val, n, 2)
+    fnd2 = routing.unflatten_fanout(found, n, 2)
+    vals, fnd = routing.merge_dual_epoch(
+        fnd2[:, 0], val2[:, 0], fnd2[:, 1], val2[:, 1]
+    )
+    stats = {
+        "hits": jnp.sum(fnd).astype(jnp.int32),
+        "misses": jnp.sum(valid & ~fnd).astype(jnp.int32),
+        "mismatches": es["mismatches"],
+        "dropped": es["dropped"],
+        "lock_tokens": es["lock_tokens"],
+        "epoch": es["epoch"],
+        "hits_old_epoch": jnp.sum(fnd2[:, 1] & ~fnd2[:, 0]).astype(jnp.int32),
+    }
+    return state, prev, vals, fnd, stats
+
+
 __all__ = [
     "DHTConfig",
     "DHTState",
+    "OP_MIGRATE",
+    "OP_READ",
+    "OP_WRITE",
+    "OpBatch",
+    "dht_execute",
     "dht_read",
     "dht_read_dual",
     "dht_read_many",
     "dht_read_many_dual",
     "dht_write",
+    "dual_fusable",
+    "migrate_ops",
+    "mixed_ops",
+    "read_ops",
+    "write_ops",
     "W_DROPPED",
     "W_INSERT",
+    "W_SKIP",
     "W_UPDATE",
     "W_EVICT",
 ]

@@ -9,7 +9,6 @@ how the mesh is otherwise partitioned for the model (DP/TP/PP axes).
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -120,6 +119,36 @@ class ShardedDHT:
             )
         )
 
+    def execute_fn(self, kinds: tuple[str, ...], state: DHTState | None = None):
+        """Jitted shard_map closure over the one-round op-engine
+        (``core/op_engine.dht_execute``, DESIGN.md §8) for uniform-kind
+        batches: ``kinds=("migrate",)`` is the resharding get-or-put path;
+        ``("read",)``/``("write",)`` mirror :meth:`read_fn`/:meth:`write_fn`.
+
+        The returned closure maps ``(state, keys, vals, valid) ->
+        (state', vals, found, code, estats)``."""
+        axes, state_spec, batch_spec = self._specs(state)
+        do_write = ("write" in kinds) or ("migrate" in kinds)
+
+        def fn(state, keys, vals, valid):
+            ops = dht_ops.OpBatch(
+                keys=keys, valid=valid, vals=vals if do_write else None)
+            state, _, out, found, code, es = dht_ops.dht_execute(
+                state, ops, kinds=kinds, axis_name=axes)
+            return state, out, found, code, _psum_stats(es, axes)
+
+        stats_spec = {k: P() for k in
+                      ("mismatches", "rounds", "lock_tokens", "dropped",
+                       "epoch")}
+        return jax.jit(
+            shard_map(
+                fn, mesh=self.mesh,
+                in_specs=(state_spec, batch_spec, batch_spec, batch_spec),
+                out_specs=(state_spec, batch_spec, batch_spec, batch_spec,
+                           stats_spec),
+            )
+        )
+
     def read_many_fn(self, state: DHTState | None = None):
         """Neighborhood (multi-key) read: (n, m, KW) candidate keys per
         batch row, all probed in ONE all_to_all round (DESIGN.md §6)."""
@@ -182,9 +211,10 @@ class ShardedDHT:
     def apply_ring(self, new_ring, batch: int = 512) -> dict:
         """Online in-place resharding to ``new_ring`` on the sharded
         backend: owner-changed entries stream in bounded batches through
-        the shard_map/all_to_all ``dht_write`` path (extraction of the
-        source entries is host-side, like the paper's migration driver).
-        """
+        the shard_map/all_to_all op-engine as get-or-put rounds — presence
+        guard and insert in ONE collective round per batch (extraction of
+        the source entries is host-side, like the paper's migration
+        driver)."""
         from . import migrate  # local import: migrate is backend-agnostic
 
         n_dev = self.mesh.devices.size
@@ -198,8 +228,7 @@ class ShardedDHT:
                              self.state.meta, self.state.csum, new_ring)
         new_state = jax.device_put(
             new_state, _state_shardings(self.mesh, new_state))
-        wfn = self.write_fn(new_state)
-        rfn = self.read_fn(new_state)
+        efn = self.execute_fn(("migrate",), new_state)
 
         kw, vw = self.cfg.key_words, self.cfg.val_words
         src_keys = np.asarray(self.state.keys).reshape(-1, kw)
@@ -215,11 +244,10 @@ class ShardedDHT:
             vals = jax.device_put(jnp.asarray(src_vals[pad]), bspec)
             valid = jax.device_put(
                 jnp.asarray(np.arange(batch) < n), bspec)
-            new_state, _, found, _ = rfn(new_state, keys, valid)
-            new_state, ws = wfn(new_state, keys, vals, valid & ~found)
-            assert int(ws["dropped"]) == 0
+            new_state, _, found, code, es = efn(new_state, keys, vals, valid)
+            assert int(es["dropped"]) == 0
             moved += int(jnp.sum(valid & ~found))
-            evicted += int(ws["evicted"])
+            evicted += int(jnp.sum(code == dht_ops.W_EVICT))
 
         # retire: reclaim source buckets whose stored key now lives
         # elsewhere (shared invariant: migrate.stale_sources)

@@ -10,14 +10,17 @@ This module adds that capability on top of the consistent-hash ring
   that is only ~1/S of the table per membership change.
 - :func:`migration_begin` / :func:`migration_step` / :func:`migration_finish`
   stream the moved entries in bounded batches through the *existing*
-  ``routing.dispatch``/``dht_write`` data path, so migration traffic obeys
-  the same capacity/overflow discipline as queries.  Each step first
-  re-reads its batch from the new epoch (a moved key that was re-written
-  by the application mid-migration must not be clobbered by its stale
-  copy), then inserts the remainder.
+  ``routing.dispatch`` data path, so migration traffic obeys the same
+  capacity/overflow discipline as queries.  Each batch is one
+  ``OP_MIGRATE`` (get-or-put) round of the op-engine (DESIGN.md §8): the
+  per-shard handler checks presence in the new epoch and inserts only the
+  absent remainder — a moved key that was re-written by the application
+  mid-migration is never clobbered by its stale copy, and the whole
+  guard-read + insert costs ONE collective round instead of two.
 - Reads issued *between* begin and finish go through
-  :func:`repro.core.dht.dht_read_dual`: new owners first, previous-epoch
-  owners for the residual misses — an in-flight entry is always visible.
+  :func:`repro.core.dht.dht_read_dual`: each key fans out to its new- and
+  old-epoch owners inside one dispatch — an in-flight entry is always
+  visible, at single-round cost.
 - :func:`migration_finish` retires the old placement: stale source buckets
   are reclaimed (only where the stored key still belongs elsewhere — a
   fresh same-bucket write is preserved) and, on shrink, the evacuated
@@ -33,7 +36,12 @@ import dataclasses
 import jax.numpy as jnp
 import numpy as np
 
-from .dht import dht_read, dht_read_dual, dht_write
+from .dht import (
+    W_EVICT,
+    dht_execute,
+    dht_read_dual,
+    migrate_ops,
+)
 from .hashing import hash64
 from .layout import INVALID, OCCUPIED, DHTConfig, DHTState, dht_create, dht_free
 from .membership import (
@@ -170,7 +178,7 @@ def migration_begin(
 
 
 def migration_step(mig: Migration) -> tuple[Migration, dict[str, int]]:
-    """Move one bounded batch through the regular dispatch/write path."""
+    """Move one bounded batch in ONE get-or-put round of the op-engine."""
     plan = mig.plan
     if mig.done:
         return mig, {"moved": 0, "skipped": 0, "remaining": 0}
@@ -192,17 +200,18 @@ def migration_step(mig: Migration) -> tuple[Migration, dict[str, int]]:
     cfg_step = dataclasses.replace(mig.new.cfg, capacity=mig.batch)
     st = DHTState(cfg_step, mig.new.keys, mig.new.vals, mig.new.meta,
                   mig.new.csum, mig.new.ring)
-    # guard: keys already (re)written in the new epoch win over stale copies
-    st, _, found, _ = dht_read(st, keys, valid)
-    st, ws = dht_write(st, keys, vals, valid & ~found)
-    assert int(ws["dropped"]) == 0, "migration write overflowed capacity"
+    # OP_MIGRATE = presence guard + insert in one round: keys already
+    # (re)written in the new epoch win over stale copies (W_SKIP)
+    st, _, _vals, found, code, es = dht_execute(
+        st, migrate_ops(keys, vals, valid), kinds=("migrate",))
+    assert int(es["dropped"]) == 0, "migration write overflowed capacity"
 
     mig.new = DHTState(mig.new.cfg, st.keys, st.vals, st.meta, st.csum,
                        st.ring)
     mig.cursor = hi
     stepped = int(jnp.sum(valid & ~found))
     skipped = int(jnp.sum(valid & found))
-    evicted = int(ws["evicted"])
+    evicted = int(jnp.sum(code == W_EVICT))
     mig.moved += stepped
     mig.skipped += skipped
     mig.evicted += evicted

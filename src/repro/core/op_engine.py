@@ -1,0 +1,642 @@
+"""Unified one-round op-engine for the DHT hot path (DESIGN.md §8).
+
+Every DHT operation is a *request record* — an op tag (``OP_READ`` /
+``OP_WRITE`` / ``OP_MIGRATE``), a key, and (for the writing kinds) a value
+— and :func:`dht_execute` dispatches an arbitrary mix of them in **one**
+routing round: one ``bin_by_dest``/``dispatch``/``collect`` cycle on both
+backends.  The public wrappers in ``core/dht.py`` (``dht_read``,
+``dht_write``, the ``_many`` and ``_dual`` variants) are thin shims over
+this engine, as are the surrogate write-back and migration paths.
+
+Mixed-op serialization contract (the engine's analogue of the paper's
+consistency modes, DESIGN.md §2/§8):
+
+- All probing ops (``OP_READ`` and the presence check of ``OP_MIGRATE``)
+  observe the table **as of the start of the round** (snapshot).
+- Write application follows: lock-free in a single optimistic pass
+  (bounded re-probe on slot conflicts), fine/coarse in conflict-ranked
+  rounds with the same lock-token accounting as before — ranked rounds now
+  cover the write side of a mixed batch, and probing ops are charged one
+  shared-lock round trip.
+
+``OP_MIGRATE`` is the compound get-or-put the migration and surrogate
+write-back paths need: return the stored value if the key is present
+(code ``W_SKIP``), else insert the carried value — the read-then-
+write-if-absent sequence that used to cost two collective rounds.
+
+Dual-epoch probing rides the same round: when ``prev`` (the previous-
+epoch table of an in-flight migration) is supplied, each request carries
+an epoch-select lane and is routed to the owner under *that* epoch's
+placement; the per-shard handler probes the corresponding slab.  A
+dual-epoch read is therefore one dispatch, not two sequential reads.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from . import routing
+from .hashing import (
+    base_bucket,
+    checksum32,
+    hash64,
+    owner_shard,
+    probe_indices,
+    ring_owner,
+)
+from .layout import (
+    GEN_SHIFT,
+    INVALID,
+    MODE_FINE,
+    MODE_LOCKFREE,
+    OCCUPIED,
+    DHTConfig,
+    DHTState,
+)
+
+# op tags — the request-record discriminator
+OP_READ = 0
+OP_WRITE = 1
+OP_MIGRATE = 2   # get-or-put: present -> return stored value, absent -> insert
+
+# per-item result codes
+W_DROPPED = 0   # routing overflow — not applied (cache-miss semantics)
+W_INSERT = 1
+W_UPDATE = 2
+W_EVICT = 3     # probe window exhausted -> overwrote last candidate (paper policy)
+W_SKIP = 4      # OP_MIGRATE: key already present in this epoch — nothing written
+
+KINDS = ("read", "write", "migrate")
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class OpBatch:
+    """An op-tagged request batch: the engine's unit of work.
+
+    ``op``/``vals``/``esel`` are optional lanes — a uniform-kind batch
+    (every request the same tag, the wrapper fast path) omits ``op`` and
+    states its kind statically via ``dht_execute(..., kinds=)``, so the
+    dispatched payload is exactly what the pre-engine per-kind rounds
+    sent.  ``esel`` selects the epoch to probe (0 = ``state``, 1 =
+    ``prev``) and is only meaningful with a dual-epoch execute."""
+
+    keys: jnp.ndarray               # (n, KW) uint32
+    valid: jnp.ndarray              # (n,) bool
+    op: jnp.ndarray | None = None   # (n,) int32 tag; None = uniform batch
+    vals: jnp.ndarray | None = None  # (n, VW) uint32 write/migrate payload
+    esel: jnp.ndarray | None = None  # (n,) int32 epoch select (dual-epoch)
+
+    def tree_flatten(self):
+        return (self.keys, self.valid, self.op, self.vals, self.esel), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+
+def _default_valid(keys: jnp.ndarray, valid) -> jnp.ndarray:
+    if valid is None:
+        return jnp.ones((keys.shape[0],), bool)
+    return valid
+
+
+def read_ops(keys: jnp.ndarray, valid=None) -> OpBatch:
+    """Uniform read batch (pair with ``kinds=("read",)``)."""
+    return OpBatch(keys=keys, valid=_default_valid(keys, valid))
+
+
+def write_ops(keys: jnp.ndarray, vals: jnp.ndarray, valid=None) -> OpBatch:
+    """Uniform write batch (pair with ``kinds=("write",)``)."""
+    return OpBatch(keys=keys, valid=_default_valid(keys, valid),
+                   vals=vals.astype(jnp.uint32))
+
+
+def migrate_ops(keys: jnp.ndarray, vals: jnp.ndarray, valid=None) -> OpBatch:
+    """Uniform get-or-put batch (pair with ``kinds=("migrate",)``)."""
+    return OpBatch(keys=keys, valid=_default_valid(keys, valid),
+                   vals=vals.astype(jnp.uint32))
+
+
+def mixed_ops(op: jnp.ndarray, keys: jnp.ndarray, vals: jnp.ndarray,
+              valid=None, esel=None) -> OpBatch:
+    """Explicitly tagged mixed batch."""
+    return OpBatch(keys=keys, valid=_default_valid(keys, valid),
+                   op=op.astype(jnp.int32), vals=vals.astype(jnp.uint32),
+                   esel=None if esel is None else esel.astype(jnp.int32))
+
+
+def dual_fusable(cfg: DHTConfig, prev_cfg: DHTConfig) -> bool:
+    """Whether a dual-epoch probe can ride one round: the two epochs'
+    slabs must agree on the record geometry (word widths, probe window)
+    and the previous shard set must be addressable inside the current
+    routing space (always true for in-place migrations, whose slab rows
+    are the union of the two shard sets)."""
+    return (
+        prev_cfg.key_words == cfg.key_words
+        and prev_cfg.val_words == cfg.val_words
+        and prev_cfg.n_probe == cfg.n_probe
+        and prev_cfg.n_shards <= cfg.n_shards
+    )
+
+
+# ---------------------------------------------------------------------------
+# shard-side machinery
+# ---------------------------------------------------------------------------
+
+def _conflict_rank(group: jnp.ndarray, valid: jnp.ndarray) -> jnp.ndarray:
+    """Rank of each valid item among items of the same conflict group
+    (stable in item order).  O(C log C), no group-sized tensors."""
+    c = group.shape[0]
+    iota = jnp.arange(c, dtype=jnp.int32)
+    g = jnp.where(valid, group.astype(jnp.int32), jnp.int32(2**30))
+    order = jnp.argsort(g, stable=True)
+    gs = g[order]
+    new_run = jnp.concatenate([jnp.ones((1,), bool), gs[1:] != gs[:-1]])
+    run_start = jax.lax.cummax(jnp.where(new_run, iota, 0))
+    rank_sorted = iota - run_start
+    rank = jnp.zeros((c,), jnp.int32).at[order].set(rank_sorted)
+    return jnp.where(valid, rank, 0)
+
+
+def _gather_window(slab: dict[str, jnp.ndarray], idx: jnp.ndarray):
+    """Gather the (C, P) probe windows from a shard slab."""
+    return {
+        "keys": slab["keys"][idx],   # (C, P, KW)
+        "vals": slab["vals"][idx],   # (C, P, VW)
+        "meta": slab["meta"][idx],   # (C, P)
+        "csum": slab["csum"][idx],   # (C, P)
+    }
+
+
+def _probe_window(win, keys):
+    """Shared read-probe core: first occupied, non-INVALID, key-equal
+    candidate wins.  Returns (has, sel, val, stored_csum)."""
+    occupied = (win["meta"] & OCCUPIED) != 0
+    invalid = (win["meta"] & INVALID) != 0
+    keymatch = jnp.all(win["keys"] == keys[:, None, :], axis=-1) & occupied & ~invalid
+    has = jnp.any(keymatch, axis=-1)
+    sel = jnp.argmax(keymatch, axis=-1).astype(jnp.int32)
+    val = jnp.take_along_axis(win["vals"], sel[:, None, None], axis=1)[:, 0, :]
+    stored_csum = jnp.take_along_axis(win["csum"], sel[:, None], axis=1)[:, 0]
+    return has, sel, val, stored_csum
+
+
+def _choose_write_slot(cfg: DHTConfig, win, keys):
+    """Paper §3.1 probe policy: same key -> update; else first writable
+    (empty or invalid); else overwrite the last candidate."""
+    occupied = (win["meta"] & OCCUPIED) != 0
+    invalid = (win["meta"] & INVALID) != 0
+    keymatch = jnp.all(win["keys"] == keys[:, None, :], axis=-1) & occupied
+    writable = (~occupied) | invalid
+    has_match = jnp.any(keymatch, axis=-1)
+    has_empty = jnp.any(writable, axis=-1)
+    first_match = jnp.argmax(keymatch, axis=-1).astype(jnp.int32)
+    first_empty = jnp.argmax(writable, axis=-1).astype(jnp.int32)
+    sel = jnp.where(
+        has_match, first_match,
+        jnp.where(has_empty, first_empty, jnp.int32(cfg.n_probe - 1)),
+    )
+    return sel, has_match, has_empty
+
+
+def _write_pass(cfg: DHTConfig, slab, base, keys, vals, active):
+    """One probe-and-publish pass (== one MPI_Get + MPI_Put round trip in
+    the paper's write).  Simultaneous writers on one bucket resolve
+    deterministically: highest item index wins ("last writer wins",
+    reproducibly)."""
+    c = base.shape[0]
+    b = cfg.buckets_per_shard
+    idx = probe_indices(base, cfg.n_probe)          # (C, P)
+    win = _gather_window(slab, idx)
+    sel, has_match, has_empty = _choose_write_slot(cfg, win, keys)
+    slot = base + sel                                # (C,) absolute bucket
+    iota = jnp.arange(c, dtype=jnp.int32)
+
+    # deterministic winner per slot
+    prio = jnp.where(active, iota, jnp.int32(-1))
+    winner = jnp.full((b,), -1, jnp.int32).at[
+        jnp.where(active, slot, b)
+    ].max(prio, mode="drop")
+    is_winner = active & (winner[slot] == prio)
+    wslot = jnp.where(is_winner, slot, b)            # b = dropped row
+
+    old_gen = slab["meta"][slot] >> GEN_SHIFT
+    new_meta = jnp.uint32(OCCUPIED) | ((old_gen + 1) << GEN_SHIFT)
+    new_csum = checksum32(keys, vals)
+
+    slab = dict(slab)
+    slab["keys"] = slab["keys"].at[wslot].set(keys, mode="drop")
+    slab["vals"] = slab["vals"].at[wslot].set(vals, mode="drop")
+    slab["meta"] = slab["meta"].at[wslot].set(new_meta, mode="drop")
+    slab["csum"] = slab["csum"].at[wslot].set(new_csum, mode="drop")
+
+    kind = jnp.where(
+        has_match, W_UPDATE, jnp.where(has_empty, W_INSERT, W_EVICT)
+    ).astype(jnp.int32)
+    # an item is settled when its key now sits at its chosen slot (it won, or
+    # a same-key duplicate with higher index won — correct last-writer-wins);
+    # losers to a *different* key re-probe, exactly like the paper's write
+    # loop finding the bucket taken and moving to the next candidate.
+    stored = slab["keys"][slot]
+    same_key = jnp.all(stored == keys, axis=-1)
+    retry = active & ~same_key & (kind != W_EVICT)
+    return slab, kind, retry
+
+
+def _apply_writes(cfg: DHTConfig, slab, base, keys, vals, valid):
+    """Probe-loop write for one shard: bounded retry passes make concurrent
+    inserts land on successive candidates instead of silently losing
+    (paper §3.1 write policy under concurrency).  Returns
+    (slab', per-item code, n_passes)."""
+
+    def body(carry):
+        slab_c, active, code, it = carry
+        slab_n, kind, retry = _write_pass(cfg, slab_c, base, keys, vals, active)
+        code = jnp.where(active, kind, code)
+        return slab_n, retry, code, it + 1
+
+    def cond(carry):
+        _, active, _, it = carry
+        return jnp.any(active) & (it < cfg.n_probe)
+
+    code0 = jnp.zeros(base.shape, jnp.int32)  # W_DROPPED
+    slab, _, code, passes = jax.lax.while_loop(
+        cond, body, (dict(slab), valid, code0, jnp.int32(0))
+    )
+    return slab, code, passes
+
+
+def _validate_and_flag(cfg: DHTConfig, slab, keys, val, stored_csum, slot,
+                       mask, has):
+    """Lock-free checksum validation + INVALID reclaim flagging — the ONE
+    definition of the mismatch policy (paper §4.2), shared by the engine's
+    shard handler and the server-KV baseline's ``_apply_reads``.
+
+    In the synchronous SPMD path a re-get returns identical bytes, so a
+    mismatch is treated as persistent after ``max_read_retries`` logical
+    retries and the bucket is flagged INVALID so writers may reclaim it —
+    the retry loop does real work in the async host path
+    (``core/async_sim.py``).  Returns (slab', found, mismatch, n_mismatch)."""
+    ok = checksum32(keys, val) == stored_csum
+    mismatch = mask & has & ~ok
+    mslot = jnp.where(mismatch, slot, cfg.buckets_per_shard)
+    slab = dict(slab)
+    slab["meta"] = slab["meta"].at[mslot].set(
+        slab["meta"][slot] | jnp.uint32(INVALID), mode="drop"
+    )
+    found = mask & has & ok
+    return slab, found, mismatch, jnp.sum(mismatch).astype(jnp.int32)
+
+
+def _apply_reads(cfg: DHTConfig, slab, base, keys, valid):
+    """Vectorized probe + (lock-free) checksum validation for one shard.
+    Returns (slab', values, found, mismatches)."""
+    idx = probe_indices(base, cfg.n_probe)
+    win = _gather_window(slab, idx)
+    has, sel, val, stored_csum = _probe_window(win, keys)
+    slot = base + sel
+
+    if cfg.mode == MODE_LOCKFREE:
+        slab, found, _mm, n_mismatch = _validate_and_flag(
+            cfg, slab, keys, val, stored_csum, slot, valid, has)
+    else:
+        found = valid & has
+        n_mismatch = jnp.int32(0)
+
+    val = jnp.where(found[:, None], val, jnp.uint32(0))
+    return slab, val, found, n_mismatch
+
+
+def _lock_token(axis_name, n_shards: int) -> jnp.ndarray:
+    """One acquire/release round-trip's worth of traffic.  The returned
+    token is threaded into the stats so the collective is not DCE'd."""
+    if axis_name is None:
+        return jnp.int32(1)
+    probe = jnp.ones((n_shards, 1), jnp.int32)
+    out = jax.lax.all_to_all(probe, axis_name, 0, 0)
+    return jnp.sum(out).astype(jnp.int32)
+
+
+def _locked_write_rounds(cfg: DHTConfig, slab, base, keys, vals, valid, axis_name):
+    """fine/coarse modes: serialize conflicting writes into rounds."""
+    if cfg.mode == MODE_FINE:
+        group = base                      # per-bucket lock granularity
+    else:
+        group = jnp.zeros_like(base)      # whole-window lock
+    rank = _conflict_rank(group, valid)
+    rounds = jnp.max(jnp.where(valid, rank, -1)) + 1
+    if axis_name is not None:
+        # uniform trip count across devices — collectives live in the body
+        rounds = jax.lax.pmax(rounds, axis_name)
+
+    code0 = jnp.zeros_like(rank)
+
+    def body(carry):
+        r, slab_c, code_c, tok = carry
+        mask = valid & (rank == r)
+        slab_n, code_r, _passes = _apply_writes(cfg, slab_c, base, keys, vals, mask)
+        code_c = jnp.where(mask, code_r, code_c)
+        # acquire + release traffic per round (2 RTs) — paper §3.5/§4.1
+        tok = tok + _lock_token(axis_name, cfg.n_shards) * 2
+        return r + 1, slab_n, code_c, tok
+
+    def cond(carry):
+        return carry[0] < rounds
+
+    _, slab, code, tok = jax.lax.while_loop(
+        cond, body, (jnp.int32(0), slab, code0, jnp.int32(0))
+    )
+    return slab, code, rounds.astype(jnp.int32), tok
+
+
+def _shard_write(cfg: DHTConfig, slab, base, keys, vals, valid, axis_name):
+    if cfg.mode == MODE_LOCKFREE:
+        slab, code, passes = _apply_writes(cfg, slab, base, keys, vals, valid)
+        return slab, code, passes, jnp.int32(0)
+    return _locked_write_rounds(cfg, slab, base, keys, vals, valid, axis_name)
+
+
+def _shard_apply(cfg: DHTConfig, prev_cfg: DHTConfig | None,
+                 slab, slab_prev, base, keys, vals, op, esel, valid,
+                 axis_name, kinds: tuple[str, ...]):
+    """Apply one shard's slice of a mixed request batch.
+
+    The serialization contract: probing ops (reads and migrate presence
+    checks) observe the slab as of round start; writes apply after, under
+    the mode's schedule (``_shard_write``).  Dual-epoch requests probe
+    ``slab_prev`` when their epoch-select lane says so; writes only ever
+    target the current-epoch slab."""
+    do_probe = ("read" in kinds) or ("migrate" in kinds)
+    do_write = ("write" in kinds) or ("migrate" in kinds)
+
+    if op is None:
+        assert len(kinds) == 1, "untagged batches must be uniform-kind"
+        only = kinds[0]
+        m_probe = valid if only != "write" else jnp.zeros_like(valid)
+        m_migrate = valid if only == "migrate" else jnp.zeros_like(valid)
+        m_write = valid if only == "write" else jnp.zeros_like(valid)
+    else:
+        m_probe = valid & (op != OP_WRITE)
+        m_migrate = valid & (op == OP_MIGRATE)
+        m_write = valid & (op == OP_WRITE)
+
+    c = base.shape[0]
+    vw = slab["vals"].shape[-1]
+    val = jnp.zeros((c, vw), jnp.uint32)
+    found = jnp.zeros((c,), bool)
+    n_mm = jnp.int32(0)
+    tok = jnp.int32(0)
+
+    if do_probe:
+        idx = probe_indices(base, cfg.n_probe)
+        win = _gather_window(slab, idx)
+        if slab_prev is not None:
+            win_prev = _gather_window(slab_prev, idx)
+            in_prev = (esel == 1)
+
+            def _sel(cur, old):
+                m = in_prev.reshape((-1,) + (1,) * (cur.ndim - 1))
+                return jnp.where(m, old, cur)
+
+            win = {k: _sel(win[k], win_prev[k]) for k in win}
+        has, sel, pval, stored_csum = _probe_window(win, keys)
+        slot = base + sel
+
+        if cfg.mode == MODE_LOCKFREE:
+            if slab_prev is None:
+                slab, found, _mm, n_mm = _validate_and_flag(
+                    cfg, slab, keys, pval, stored_csum, slot, m_probe, has)
+            else:
+                # flag persistently diverging buckets INVALID in whichever
+                # epoch's slab was probed, so its writers may reclaim them
+                slab, found_new, mm_new, _ = _validate_and_flag(
+                    cfg, slab, keys, pval, stored_csum, slot,
+                    m_probe & ~in_prev, has)
+                slab_prev, found_old, mm_old, _ = _validate_and_flag(
+                    prev_cfg, slab_prev, keys, pval, stored_csum, slot,
+                    m_probe & in_prev, has)
+                found = found_new | found_old
+                n_mm = jnp.sum(mm_new | mm_old).astype(jnp.int32)
+        else:
+            found = m_probe & has
+        val = jnp.where(found[:, None], pval, jnp.uint32(0))
+
+        if cfg.mode != MODE_LOCKFREE:
+            tok = _lock_token(axis_name, cfg.n_shards) * 2  # shared lock RTs
+
+    code = jnp.zeros((c,), jnp.int32)
+    rounds = jnp.int32(0)
+    if do_write:
+        wmask = m_write | (m_migrate & ~found)
+        slab, wcode, rounds, tok_w = _shard_write(
+            cfg, slab, base, keys, vals, wmask, axis_name)
+        tok = tok + tok_w
+        code = jnp.where(
+            wmask, wcode,
+            jnp.where(m_migrate & found, jnp.int32(W_SKIP), jnp.int32(0)),
+        )
+
+    return slab, slab_prev, val, found, code, n_mm, rounds, tok
+
+
+# ---------------------------------------------------------------------------
+# the engine
+# ---------------------------------------------------------------------------
+
+def _owner_epoch(state: DHTState, h_hi):
+    """Owner placement under this table's membership: static modulo
+    (paper) or consistent-hash ring (DESIGN.md §4)."""
+    if state.ring is None:
+        return owner_shard(h_hi, state.cfg.n_shards), jnp.int32(0)
+    r = state.ring
+    return ring_owner(h_hi, r.positions, r.owners, r.n_live), r.epoch
+
+
+def _route_ops(state: DHTState, prev: DHTState | None, ops: OpBatch,
+               capacity: int | None):
+    """One binning for the whole batch: each request routed to its owner
+    under the epoch its ``esel`` lane names."""
+    cfg = state.cfg
+    h_hi, h_lo = hash64(ops.keys)
+    dest, epoch = _owner_epoch(state, h_hi)
+    base = base_bucket(h_lo, cfg.buckets_per_shard, cfg.n_probe)
+    if prev is not None:
+        dest_prev, _ = _owner_epoch(prev, h_hi)
+        base_prev = base_bucket(
+            h_lo, prev.cfg.buckets_per_shard, prev.cfg.n_probe)
+        in_prev = ops.esel == 1
+        dest = jnp.where(in_prev, dest_prev, dest)
+        base = jnp.where(in_prev, base_prev, base)
+    n = ops.keys.shape[0]
+    cap = capacity or cfg.capacity or routing.auto_capacity(n, cfg.n_shards)
+    binned = routing.bin_by_dest(dest, cfg.n_shards, cap, epoch=epoch)
+    return binned, base
+
+
+def _slab_of(state: DHTState):
+    return {"keys": state.keys, "vals": state.vals,
+            "meta": state.meta, "csum": state.csum}
+
+
+def _state_from(state: DHTState, slab) -> DHTState:
+    return DHTState(state.cfg, slab["keys"], slab["vals"], slab["meta"],
+                    slab["csum"], state.ring)
+
+
+def _pad_rows(x: jnp.ndarray, rows: int) -> jnp.ndarray:
+    if x.shape[0] == rows:
+        return x
+    pad = [(0, rows - x.shape[0])] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x, pad)
+
+
+def dht_execute(
+    state: DHTState,
+    ops: OpBatch,
+    *,
+    kinds: Sequence[str] = KINDS,
+    prev: DHTState | None = None,
+    axis_name: Any = None,
+    capacity: int | None = None,
+) -> tuple[DHTState, DHTState | None, jnp.ndarray, jnp.ndarray,
+           jnp.ndarray, dict[str, jnp.ndarray]]:
+    """Execute an op-tagged request batch in ONE collective round.
+
+    ``kinds`` is the static set of op kinds the batch may contain — it
+    prunes the dispatched lanes and the shard-side machinery, so a
+    uniform read batch costs exactly what the dedicated read round used
+    to.  ``prev`` enables dual-epoch probing (``ops.esel`` required);
+    ``capacity`` overrides the routing capacity for this call.
+
+    Returns ``(state', prev', vals, found, code, estats)``:
+
+    - ``vals``/``found`` — probe results (reads and migrate get-or-put
+      hits); zeros/False for pure writes.
+    - ``code`` — per-item write code (``W_INSERT``/``W_UPDATE``/
+      ``W_EVICT``/``W_SKIP``; ``W_DROPPED`` for reads and overflow).
+    - ``estats`` — shard-side counters: ``mismatches``, ``rounds``,
+      ``lock_tokens``, ``dropped``, ``epoch``.
+    """
+    cfg = state.cfg
+    kinds = tuple(kinds)
+    assert kinds and all(k in KINDS for k in kinds), kinds
+    do_write = ("write" in kinds) or ("migrate" in kinds)
+    if do_write:
+        assert ops.vals is not None, "write/migrate batches need a value lane"
+    if prev is not None:
+        assert ops.esel is not None, "dual-epoch execute needs ops.esel"
+        assert kinds == ("read",), (
+            "dual-epoch execute is read-only: an esel==1 write row would be "
+            "routed by old-epoch placement but applied to the new-epoch "
+            "slab — unreachable afterwards.  Writes go through a separate "
+            "single-epoch round (they always target the new epoch).")
+        assert dual_fusable(cfg, prev.cfg), (
+            "single-round dual-epoch probe needs compatible geometry; "
+            "use the sequential dht_read_dual fallback")
+
+    binned, base = _route_ops(state, prev, ops, capacity)
+    payload_valid = (ops.valid & binned.kept).astype(jnp.int32)
+    payloads = [base, ops.keys]
+    if do_write:
+        payloads.append(ops.vals.astype(jnp.uint32))
+    if ops.op is not None:
+        payloads.append(ops.op.astype(jnp.int32))
+    if prev is not None:
+        payloads.append(ops.esel.astype(jnp.int32))
+    payloads.append(payload_valid)
+    inc = routing.dispatch(binned, payloads, axis_name)
+
+    def _unpack(parts):
+        it = iter(parts)
+        b, k = next(it), next(it)
+        v = next(it) if do_write else None
+        o = next(it) if ops.op is not None else None
+        e = next(it) if prev is not None else None
+        m = next(it)
+        return b, k, v, o, e, m
+
+    prev_cfg = None if prev is None else prev.cfg
+    if axis_name is None:
+        slab = _slab_of(state)
+        if prev is not None:
+            rows = slab["meta"].shape[0]
+            pslab = {k: _pad_rows(v, rows) for k, v in _slab_of(prev).items()}
+
+            def handler(sl, psl, *parts):
+                b, k, v, o, e, m = _unpack(parts)
+                return _shard_apply(cfg, prev_cfg, sl, psl, b, k, v, o, e,
+                                    m.astype(bool), None, kinds)
+
+            out = jax.vmap(handler)(slab, pslab, *inc)
+        else:
+
+            def handler(sl, *parts):
+                b, k, v, o, e, m = _unpack(parts)
+                return _shard_apply(cfg, None, sl, None, b, k, v, o, e,
+                                    m.astype(bool), None, kinds)
+
+            out = jax.vmap(handler)(slab, *inc)
+        slab, pslab, val, found, code, n_mm, rounds, tok = out
+        n_mm, tok = jnp.sum(n_mm), jnp.sum(tok)
+        rounds = jnp.max(rounds)
+        val_b, found_b, code_b = routing.collect(
+            binned, [val, found.astype(jnp.int32), code], None)
+    else:
+        slab = jax.tree.map(lambda x: x[0], _slab_of(state))
+        pslab = (None if prev is None
+                 else jax.tree.map(lambda x: x[0], _slab_of(prev)))
+        b, k, v, o, e, m = _unpack(inc)
+        slab, pslab, val, found, code, n_mm, rounds, tok = _shard_apply(
+            cfg, prev_cfg, slab, pslab, b, k, v, o, e,
+            m.astype(bool), axis_name, kinds)
+        slab = jax.tree.map(lambda x: x[None], slab)
+        if pslab is not None:
+            pslab = jax.tree.map(lambda x: x[None], pslab)
+        val_b, found_b, code_b = routing.collect(
+            binned, [val, found.astype(jnp.int32), code], axis_name)
+
+    found_out = (found_b > 0) & ops.valid & binned.kept
+    val_out = jnp.where(found_out[:, None], val_b, jnp.uint32(0))
+    code_out = jnp.where(ops.valid & binned.kept, code_b, W_DROPPED)
+    estats = {
+        "mismatches": n_mm.astype(jnp.int32),
+        "rounds": rounds.astype(jnp.int32),
+        "lock_tokens": tok.astype(jnp.int32),
+        "dropped": binned.n_dropped,
+        "epoch": binned.epoch,
+    }
+    state_out = _state_from(state, slab)
+    if prev is None:
+        prev_out = None
+    else:
+        # drop the row padding added for the paired vmap (no-op when the
+        # epochs already share a shard count, and on the sharded backend)
+        prows = prev.meta.shape[0]
+        prev_out = _state_from(
+            prev, {k2: v2[:prows] for k2, v2 in pslab.items()})
+    return state_out, prev_out, val_out, found_out, code_out, estats
+
+
+__all__ = [
+    "KINDS",
+    "OP_MIGRATE",
+    "OP_READ",
+    "OP_WRITE",
+    "OpBatch",
+    "W_DROPPED",
+    "W_EVICT",
+    "W_INSERT",
+    "W_SKIP",
+    "W_UPDATE",
+    "dht_execute",
+    "dual_fusable",
+    "migrate_ops",
+    "mixed_ops",
+    "read_ops",
+    "write_ops",
+]

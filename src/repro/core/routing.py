@@ -22,10 +22,28 @@ Two execution backends with identical math:
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Sequence
 
 import jax
 import jax.numpy as jnp
+
+# Collective-round bookkeeping: each dispatch() call opens one routing
+# round (its collect() is the same round's reply leg, so only dispatches
+# are counted).  Counted at Python call time, so under jit it counts the
+# rounds of one traced program — exactly "collective rounds per logical
+# op" (DESIGN.md §8).
+_DISPATCH_ROUNDS = 0
+
+
+def reset_round_count() -> None:
+    global _DISPATCH_ROUNDS
+    _DISPATCH_ROUNDS = 0
+
+
+def round_count() -> int:
+    """Routing rounds issued since :func:`reset_round_count`."""
+    return _DISPATCH_ROUNDS
 
 
 @dataclasses.dataclass
@@ -44,14 +62,15 @@ class Binned:
     capacity: int
     n_dest: int
     n_dropped: jnp.ndarray  # () int32
-    epoch: jnp.ndarray = 0  # () int32 membership epoch of `dest`
+    # () int32 membership epoch of `dest`
+    epoch: jnp.ndarray = dataclasses.field(
+        default_factory=lambda: jnp.int32(0))
 
 
 def bin_by_dest(
     dest: jnp.ndarray, n_dest: int, capacity: int, epoch=None
 ) -> Binned:
     """Compute within-bin positions with a stable order (item index)."""
-    n = dest.shape[0]
     onehot = (dest[:, None] == jnp.arange(n_dest, dtype=dest.dtype)[None, :])
     # rank of item i among items with the same destination (stable by index)
     pos = (jnp.cumsum(onehot.astype(jnp.int32), axis=0) - 1)
@@ -98,6 +117,8 @@ def dispatch(
       - local:       (n_dest, capacity, ...) global view, vmapped downstream
     Plus an implicit validity channel the caller packs into the payload.
     """
+    global _DISPATCH_ROUNDS
+    _DISPATCH_ROUNDS += 1
     out = []
     for p in payloads:
         buf = _scatter_to_bins(b, p)
@@ -173,7 +194,5 @@ def auto_capacity(n_local: int, n_dest: int, factor: float = 4.0, floor: int = 1
     Overflow degrades to a cache miss (never an error/deadlock), so the
     factor trades buffer memory against stray misses; 4x keeps the miss
     probability negligible for uniform keys at per-device batches >= 128."""
-    import math
-
     c = int(math.ceil(n_local / max(n_dest, 1) * factor))
     return min(max(c, floor), max(n_local, 1))

@@ -17,7 +17,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from . import dht as dht_ops
+from . import op_engine
 from .hashing import base_bucket, hash64
 from .layout import DHTConfig, DHTState, dht_create
 
@@ -54,7 +54,7 @@ def server_write(state: DHTState, keys, vals, server_width: int = 24):
 
     def body(r, slab_c):
         mask = (iota >= r * server_width) & (iota < (r + 1) * server_width)
-        slab_n, _code, _passes = dht_ops._apply_writes(cfg, slab_c, base, keys, vals, mask)
+        slab_n, _code, _passes = op_engine._apply_writes(cfg, slab_c, base, keys, vals, mask)
         return slab_n
 
     slab = jax.lax.fori_loop(0, rounds, body, slab)
@@ -75,7 +75,7 @@ def server_read(state: DHTState, keys, server_width: int = 24):
     slab = {"keys": state.keys[0], "vals": state.vals[0],
             "meta": state.meta[0], "csum": state.csum[0]}
     # reads do not mutate; the server still only serves server_width per round
-    slab2, val, found, _mm = dht_ops._apply_reads(
+    slab2, val, found, _mm = op_engine._apply_reads(
         cfg, slab, base, keys, jnp.ones((n,), bool)
     )
     return state, val, found, {"rounds": jnp.int32(rounds)}

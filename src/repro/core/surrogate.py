@@ -21,8 +21,8 @@ import jax.numpy as jnp
 
 from . import dht as dht_ops
 from . import interp as interp_ops
-from . import membership, migrate, neighbors
-from .interp import PROV_EXACT, PROV_INTERP, PROV_MISS, InterpConfig
+from . import membership, migrate, neighbors, routing
+from .interp import PROV_MISS, InterpConfig
 from .layout import DHTConfig, DHTState, dht_create, pack_floats, unpack_floats
 from .neighbors import round_significant  # noqa: F401  (canonical home moved)
 
@@ -102,25 +102,79 @@ def lookup_or_compute(
 ):
     """The surrogate pattern: DHT hit -> reuse; miss -> compute + publish.
 
-    ``compute_fn(inputs) -> outputs`` is the expensive simulation.  In JAX's
-    batched execution the misses are computed for all rows and selected by
-    mask; the *work saved* is therefore accounted by the returned hit stats.
-    On the host-loop (un-traced) path a full-hit batch short-circuits:
-    ``compute_fn`` is never invoked — the realized wall-clock saving of the
-    POET example's full-hit tiles, now in the library itself.
+    ``compute_fn(inputs) -> outputs`` is the expensive simulation.
+
+    Traced (jit / shard_map) path: misses are computed for all rows and
+    selected by mask anyway, so the lookup and the write-back ride ONE
+    get-or-put round of the op-engine (``OP_MIGRATE``, DESIGN.md §8) —
+    present keys return their stored value untouched, absent keys publish
+    the computed output, at half the collective-round cost of the old
+    read-round + write-round sequence.
+
+    Host-loop (un-traced) path: a read round first, so a full-hit batch
+    short-circuits and ``compute_fn`` is never invoked — the realized
+    wall-clock saving of the POET example's full-hit tiles.
     """
-    state, cached, found, rstats = lookup(cfg, state, inputs, axis_name=axis_name)
-    if not isinstance(found, jax.core.Tracer) and bool(found.all()):
+    traced = (isinstance(inputs, jax.core.Tracer)
+              or isinstance(state.keys, jax.core.Tracer)
+              or axis_name is not None)
+    if not traced:
+        state, cached, found, rstats = lookup(
+            cfg, state, inputs, axis_name=axis_name)
+        if bool(found.all()):
+            stats = {"hits": rstats["hits"], "misses": rstats["misses"],
+                     "mismatches": rstats["mismatches"],
+                     "stored": jnp.int32(0)}
+            return state, cached, found, stats
+        computed = compute_fn(inputs)
+        outputs = jnp.where(found[:, None], cached, computed)
+        state, wstats = store(cfg, state, inputs, computed, valid=~found,
+                              axis_name=axis_name)
         stats = {"hits": rstats["hits"], "misses": rstats["misses"],
                  "mismatches": rstats["mismatches"],
-                 "stored": jnp.int32(0)}
-        return state, cached, found, stats
+                 "stored": wstats["inserted"]}
+        return state, outputs, found, stats
+
+    keys = make_keys(cfg, inputs)
     computed = compute_fn(inputs)
+    vals = pack_floats(computed, cfg.dht.val_words)
+    state, _, val_words, found, code, es = dht_ops.dht_execute(
+        state, dht_ops.migrate_ops(keys, vals), kinds=("migrate",),
+        axis_name=axis_name)
+    cached = unpack_floats(val_words, cfg.n_outputs)
     outputs = jnp.where(found[:, None], cached, computed)
-    state, wstats = store(cfg, state, inputs, computed, valid=~found, axis_name=axis_name)
-    stats = {"hits": rstats["hits"], "misses": rstats["misses"],
-             "mismatches": rstats["mismatches"], "stored": wstats["inserted"]}
+    stats = {
+        "hits": jnp.sum(found).astype(jnp.int32),
+        "misses": jnp.sum(~found).astype(jnp.int32),
+        "mismatches": es["mismatches"],
+        "stored": jnp.sum(code == dht_ops.W_INSERT).astype(jnp.int32),
+    }
     return state, outputs, found, stats
+
+
+def _interp_tail(cfg: SurrogateConfig, inputs, points, val_words, found,
+                 icfg: InterpConfig, valid, probe_hits, transport_stats):
+    """Shared post-probe pipeline of the neighborhood query: unpack the
+    stencil replies, derive the lattice step scale, run the tolerance-gated
+    IDW blend, and assemble the stats dict (DESIGN.md §6).  The read
+    *transport* — plain round, dual-epoch round, or the traced mixed
+    read+get-or-put engine round — is the only thing callers vary."""
+    values = unpack_floats(val_words, cfg.n_outputs)        # (n, M, O)
+    # stencil entry 0 is the rounded center — reuse it for the step scale
+    step = neighbors.lattice_step(points[:, 0], cfg.sig_digits)
+    outputs, provenance, istats = interp_ops.interpolate(
+        inputs, points, values, found, step, icfg)
+    stats = {
+        "exact": istats["exact"],
+        "interpolated": istats["interpolated"],
+        "misses": jnp.sum(valid & (provenance == PROV_MISS)).astype(jnp.int32),
+        "neighbors_mean": istats["neighbors_mean"],
+        "probe_hits": probe_hits,
+        "mismatches": transport_stats["mismatches"],
+        "dropped": transport_stats["dropped"],
+        "epoch": transport_stats["epoch"],
+    }
+    return outputs, provenance, stats
 
 
 def lookup_or_interpolate(
@@ -164,21 +218,9 @@ def lookup_or_interpolate(
     else:
         state, prev, val_words, found, rstats = dht_ops.dht_read_many_dual(
             state, prev, keys, vmask, axis_name=axis_name)
-    values = unpack_floats(val_words, cfg.n_outputs)        # (n, M, O)
-    # stencil entry 0 is the rounded center — reuse it for the step scale
-    step = neighbors.lattice_step(points[:, 0], cfg.sig_digits)
-    outputs, provenance, istats = interp_ops.interpolate(
-        inputs, points, values, found, step, icfg)
-    stats = {
-        "exact": istats["exact"],
-        "interpolated": istats["interpolated"],
-        "misses": jnp.sum(valid & (provenance == PROV_MISS)).astype(jnp.int32),
-        "neighbors_mean": istats["neighbors_mean"],
-        "probe_hits": rstats["hits"],
-        "mismatches": rstats["mismatches"],
-        "dropped": rstats["dropped"],
-        "epoch": rstats["epoch"],
-    }
+    outputs, provenance, stats = _interp_tail(
+        cfg, inputs, points, val_words, found, icfg, valid,
+        probe_hits=rstats["hits"], transport_stats=rstats)
     if prev is None:
         return state, outputs, provenance, stats
     return state, prev, outputs, provenance, stats
@@ -195,18 +237,67 @@ def lookup_interpolate_or_compute(
 ):
     """:func:`lookup_or_compute` with the neighborhood fast path: only rows
     neither cached nor interpolable pay ``compute_fn``; freshly computed
-    (exact) outputs are published back — interpolated ones are NOT stored,
-    so model error never re-enters the table as ground truth.
+    (exact) outputs are published back — interpolated *values* are NOT
+    stored, so model error never re-enters the table as ground truth.
 
-    Host-loop fast path: a batch fully resolved by the cache (no
-    ``PROV_MISS`` row) skips ``compute_fn`` entirely."""
-    state, resolved_out, provenance, stats = lookup_or_interpolate(
-        cfg, state, inputs, icfg, axis_name=axis_name)
-    miss = provenance == PROV_MISS
-    if not isinstance(miss, jax.core.Tracer) and not bool(miss.any()):
-        return state, resolved_out, provenance, {**stats, "stored": jnp.int32(0)}
+    Traced (jit / shard_map) path: ``compute_fn`` runs for the whole batch
+    anyway, so the n·M stencil reads and the n center-key write-backs ride
+    ONE mixed op-engine round (``OP_READ`` + ``OP_MIGRATE``, DESIGN.md §8)
+    — the get-or-put publishes the *computed* output for every row whose
+    exact key was absent (misses and interpolated rows alike; both store
+    ground truth, raising future exact-hit rate), and skips present keys.
+
+    Host-loop path: probe round first, so a batch fully resolved by the
+    cache (no ``PROV_MISS`` row) skips ``compute_fn`` entirely, and only
+    true misses are published — the pre-engine semantics."""
+    traced = (isinstance(inputs, jax.core.Tracer)
+              or isinstance(state.keys, jax.core.Tracer)
+              or axis_name is not None)
+    if not traced:
+        state, resolved_out, provenance, stats = lookup_or_interpolate(
+            cfg, state, inputs, icfg, axis_name=axis_name)
+        miss = provenance == PROV_MISS
+        if not bool(miss.any()):
+            return state, resolved_out, provenance, \
+                {**stats, "stored": jnp.int32(0)}
+        computed = compute_fn(inputs)
+        outputs = jnp.where(miss[:, None], computed, resolved_out)
+        state, wstats = store(cfg, state, inputs, computed, valid=miss,
+                              axis_name=axis_name)
+        return state, outputs, provenance, \
+            {**stats, "stored": wstats["inserted"]}
+
     computed = compute_fn(inputs)
+    keys, points = neighbors.stencil_keys(
+        inputs, cfg.sig_digits, cfg.dht.key_words,
+        radius=icfg.radius, coarse_tier=icfg.coarse_tier)
+    n, m = keys.shape[0], keys.shape[1]
+    vmask = neighbors.dedup_mask(keys)
+    flat, vflat = routing.flatten_fanout(keys, vmask)
+    # stencil entry 0 is the rounded center — the exact-match key
+    center = keys[:, 0]
+    cvals = pack_floats(computed, cfg.dht.val_words)
+    nm = n * m
+    op = jnp.concatenate([
+        jnp.full((nm,), dht_ops.OP_READ, jnp.int32),
+        jnp.full((n,), dht_ops.OP_MIGRATE, jnp.int32),
+    ])
+    ops = dht_ops.mixed_ops(
+        op,
+        jnp.concatenate([flat, center]),
+        jnp.concatenate([jnp.zeros((nm,) + cvals.shape[1:], jnp.uint32),
+                         cvals]),
+        valid=jnp.concatenate([vflat, jnp.ones((n,), bool)]),
+    )
+    state, _, val_flat, found_flat, code, es = dht_ops.dht_execute(
+        state, ops, kinds=("read", "migrate"), axis_name=axis_name)
+    val_words = routing.unflatten_fanout(val_flat[:nm], n, m)
+    found = routing.unflatten_fanout(found_flat[:nm], n, m)
+    resolved_out, provenance, stats = _interp_tail(
+        cfg, inputs, points, val_words, found, icfg,
+        valid=jnp.ones((n,), bool),
+        probe_hits=jnp.sum(found).astype(jnp.int32), transport_stats=es)
+    miss = provenance == PROV_MISS
     outputs = jnp.where(miss[:, None], computed, resolved_out)
-    state, wstats = store(cfg, state, inputs, computed, valid=miss,
-                          axis_name=axis_name)
-    return state, outputs, provenance, {**stats, "stored": wstats["inserted"]}
+    stats["stored"] = jnp.sum(code[nm:] == dht_ops.W_INSERT).astype(jnp.int32)
+    return state, outputs, provenance, stats

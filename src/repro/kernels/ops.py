@@ -40,6 +40,18 @@ def probe(slab_keys, slab_vals, slab_meta, slab_csum, qkeys, base,
     )
 
 
+def shard_apply(slab_keys, slab_vals, slab_meta, slab_csum, qkeys, base,
+                *, n_probe=6, validate_checksum=True,
+                interpret: bool | None = None):
+    from .apply_kernel import shard_apply_pallas
+
+    return shard_apply_pallas(
+        slab_keys, slab_vals, slab_meta, slab_csum, qkeys, base,
+        n_probe=n_probe, validate_checksum=validate_checksum,
+        interpret=_default_interpret() if interpret is None else interpret,
+    )
+
+
 def round_sig(x, sig_digits, *, interpret: bool | None = None):
     return round_sig_pallas(
         x, sig_digits,

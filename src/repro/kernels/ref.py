@@ -72,6 +72,65 @@ def ref_probe(
     return val, has, slot
 
 
+def ref_shard_apply(
+    slab_keys: jnp.ndarray,   # (B, KW) uint32
+    slab_vals: jnp.ndarray,   # (B, VW) uint32
+    slab_meta: jnp.ndarray,   # (B,) uint32
+    slab_csum: jnp.ndarray,   # (B,) uint32
+    qkeys: jnp.ndarray,       # (C, KW) uint32
+    base: jnp.ndarray,        # (C,) int32 window starts
+    n_probe: int,
+    validate_checksum: bool = True,
+):
+    """Oracle for the fused shard-apply kernel: ONE window pass yields both
+    the read result and the write-slot decision, with the production
+    op-engine semantics (``core/op_engine._probe_window`` +
+    ``_choose_write_slot``): the read selects the first occupied,
+    non-INVALID, key-equal candidate and checksum-validates only that one;
+    the write side picks same-key -> update, else first writable (empty or
+    INVALID), else the last candidate (evict).
+
+    Returns (vals (C, VW), found (C,), wsel (C,) relative slot,
+    wkind (C,) W_UPDATE/W_INSERT/W_EVICT)."""
+    from repro.core.op_engine import W_EVICT, W_INSERT, W_UPDATE
+
+    idx = probe_indices(base, n_probe)                       # (C, P)
+    bkeys = slab_keys[idx]
+    bvals = slab_vals[idx]
+    bmeta = slab_meta[idx]
+    bcsum = slab_csum[idx]
+    occupied = (bmeta & OCCUPIED) != 0
+    invalid = (bmeta & INVALID) != 0
+    keys_eq = jnp.all(bkeys == qkeys[:, None, :], axis=-1)
+
+    # read lane
+    rmatch = keys_eq & occupied & ~invalid
+    has = jnp.any(rmatch, axis=-1)
+    sel = jnp.argmax(rmatch, axis=-1)
+    val = jnp.take_along_axis(bvals, sel[:, None, None], axis=1)[:, 0]
+    if validate_checksum:
+        stored = jnp.take_along_axis(bcsum, sel[:, None], axis=1)[:, 0]
+        has = has & (checksum32(qkeys, val) == stored)
+    val = jnp.where(has[:, None], val, jnp.uint32(0))
+
+    # write lane (paper §3.1 slot policy)
+    wmatch = keys_eq & occupied
+    writable = (~occupied) | invalid
+    has_match = jnp.any(wmatch, axis=-1)
+    has_empty = jnp.any(writable, axis=-1)
+    first_match = jnp.argmax(wmatch, axis=-1).astype(jnp.int32)
+    first_empty = jnp.argmax(writable, axis=-1).astype(jnp.int32)
+    wsel = jnp.where(
+        has_match, first_match,
+        jnp.where(has_empty, first_empty, jnp.int32(n_probe - 1)),
+    )
+    wkind = jnp.where(
+        has_match, jnp.int32(W_UPDATE),
+        jnp.where(has_empty, jnp.int32(W_INSERT), jnp.int32(W_EVICT)),
+    )
+    return val, has, wsel, wkind
+
+
 def ref_byte_window_probe(slab_keys, slab_vals, slab_meta, slab_csum,
                           qkeys, n_probe, n_buckets):
     """The paper's original byte-window candidate derivation (Fig. 2),

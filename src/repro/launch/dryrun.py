@@ -32,7 +32,7 @@ from repro.models import init_lm
 from repro.models.act_sharding import set_activation_spec
 from repro.models.config import ModelConfig
 from repro.optim.adamw import AdamWConfig, init_opt_state
-from repro.roofline.analysis import analyze, model_flops_for
+from repro.roofline.analysis import model_flops_for
 from repro.serving.serve_step import make_serve_step
 from repro.train.train_step import make_train_step
 
@@ -64,7 +64,6 @@ def _shard_bytes(shardings, shapes) -> int:
     """Per-device bytes of a sharded tree (backup for memory_analysis)."""
     total = 0
     for sh, sp in zip(jax.tree.leaves(shardings), jax.tree.leaves(shapes)):
-        n = int(np.prod(sp.shape)) if sp.shape else 1
         shard = sh.shard_shape(sp.shape) if hasattr(sh, "shard_shape") else sp.shape
         n_local = int(np.prod(shard)) if shard else 1
         total += n_local * sp.dtype.itemsize

@@ -45,7 +45,6 @@ def fix_spec(spec: P, shape: tuple[int, ...], mesh) -> P:
         if e is None:
             continue
         size = _axes_size(mesh, e)
-        placed = False
         for j in range(i, n):
             if out[j] is not None:
                 continue
@@ -53,9 +52,7 @@ def fix_spec(spec: P, shape: tuple[int, ...], mesh) -> P:
                 continue
             if shape[j] % size == 0 and shape[j] >= size:
                 out[j] = e
-                placed = True
                 break
-        del placed
     return P(*out)
 
 

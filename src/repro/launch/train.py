@@ -12,7 +12,6 @@ from __future__ import annotations
 
 import argparse
 
-import jax
 
 from repro.configs import all_arch_ids, get_config, reduced
 from repro.data import DataConfig

@@ -3,7 +3,7 @@ ring-buffer KV cache for decode (local layers cache only their window)."""
 from __future__ import annotations
 
 import math
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -11,7 +11,6 @@ reads its HLO.
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Optional
 
 import jax
@@ -42,11 +41,11 @@ def _tile_scores(qc, kc, softcap):
 
 def _online_update(carry, s, vc):
     """Standard streaming-softmax accumulator update."""
-    m, l, acc = carry
+    m, lse, acc = carry
     m_new = jnp.maximum(m, s.max(axis=-1))
     alpha = jnp.exp(m - m_new)
     p = jnp.exp(s - m_new[..., None])
-    l_new = l * alpha + p.sum(axis=-1)
+    l_new = lse * alpha + p.sum(axis=-1)
     pv = jnp.einsum("bkgqc,bckd->bkgqd", p.astype(vc.dtype), vc)
     acc_new = acc * alpha[..., None].astype(acc.dtype) + pv
     return m_new, l_new, acc_new
@@ -67,10 +66,10 @@ def chunked_attention(
 ) -> jnp.ndarray:
     """Returns (B, S, H*D)."""
     b, s, h, d = q.shape
-    l, hk = k.shape[1], k.shape[2]
+    lk, hk = k.shape[1], k.shape[2]
     g = h // hk
     q_chunk = min(q_chunk, s)
-    kv_chunk = min(kv_chunk, l)
+    kv_chunk = min(kv_chunk, lk)
     s_orig = s
     # pad to chunk multiples; padded KV rows get position -1 (masked out)
     if s % q_chunk:
@@ -78,13 +77,13 @@ def chunked_attention(
         q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
         q_pos = jnp.pad(q_pos, ((0, 0), (0, pq)))
         s += pq
-    if l % kv_chunk:
-        pk = kv_chunk - l % kv_chunk
+    if lk % kv_chunk:
+        pk = kv_chunk - lk % kv_chunk
         k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
         k_pos = jnp.pad(k_pos, ((0, 0), (0, pk)), constant_values=-1)
-        l += pk
-    nq, nk = s // q_chunk, l // kv_chunk
+        lk += pk
+    nq, nk = s // q_chunk, lk // kv_chunk
 
     q5 = q.reshape(b, nq, q_chunk, hk, g, d)
     qp = q_pos.reshape(b, nq, q_chunk)
@@ -92,7 +91,7 @@ def chunked_attention(
     v4 = v.reshape(b, nk, kv_chunk, hk, d)
     kp = k_pos.reshape(b, nk, kv_chunk)
 
-    banded = window is not None and window < l
+    banded = window is not None and window < lk
     if banded:
         # only the KV band [q_end - tile_len, q_end) can be visible
         tile_len = -(-(window + q_chunk) // kv_chunk) * kv_chunk
@@ -105,7 +104,7 @@ def chunked_attention(
 
         if banded:
             q_end = (qi + 1) * q_chunk
-            start = jnp.clip(q_end - tile_len, 0, l - tile_len)
+            start = jnp.clip(q_end - tile_len, 0, lk - tile_len)
             kc = jax.lax.dynamic_slice(
                 k, (0, start, 0, 0), (b, tile_len, hk, d))
             vc = jax.lax.dynamic_slice(

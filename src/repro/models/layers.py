@@ -26,7 +26,6 @@ def _init_dense(key, in_dim, out_dims, scale=None):
 def dense(params, x, *, bias_key=None):
     """x @ W (+ b). W: (in, *out).  Contraction over the last axis of x."""
     w = params["w"].astype(x.dtype)
-    out_rank = w.ndim - 1
     y = jax.lax.dot_general(
         x, w, (((x.ndim - 1,), (0,)), ((), ())),
         preferred_element_type=x.dtype,

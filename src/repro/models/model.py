@@ -3,7 +3,7 @@ train loss, decode step, and per-shape input specs used by the dry-run."""
 from __future__ import annotations
 
 import math
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp

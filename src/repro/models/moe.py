@@ -1,7 +1,7 @@
 """Mixture-of-Experts layer with capacity-factor token dispatch.
 
 The dispatch machinery is the same sort-based capacity binning the DHT
-router uses (``repro.core.dht._conflict_rank`` — one substrate, two
+router uses (``repro.core.op_engine._conflict_rank`` — one substrate, two
 clients, per DESIGN.md §6): tokens are ranked within their expert bin and
 dropped past capacity (standard switch-style semantics; dropped tokens
 pass through the residual).
@@ -18,7 +18,7 @@ import math
 import jax
 import jax.numpy as jnp
 
-from repro.core.dht import _conflict_rank
+from repro.core.op_engine import _conflict_rank
 from .layers import _init_dense
 
 

@@ -8,7 +8,7 @@ parameter), so adding data-parallel replicas never replicates moments.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -49,7 +49,9 @@ def init_opt_state(params, master: bool = False) -> dict[str, Any]:
     """master=True: keep an f32 master copy (params themselves then live in
     bf16 so the FSDP all-gathers move half the bytes — no convert sits in
     the gather path, which XLA would otherwise hoist past the gather)."""
-    zeros = lambda p: jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), p)
+    def zeros(p):
+        return jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), p)
+
     st = {"mu": zeros(params), "nu": zeros(params),
           "step": jnp.zeros((), jnp.int32)}
     if master:

@@ -16,11 +16,10 @@ training (tests/test_compressed_reduce.py checks the bound).
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.compat import shard_map
 

@@ -13,7 +13,7 @@ import jax.numpy as jnp
 
 from repro.models import config as C
 from repro.models.attention import attention
-from repro.models.layers import embed, mlp, norm, unembed
+from repro.models.layers import mlp, norm, unembed
 from repro.models.model import _embed_inputs
 from repro.models.moe import moe_forward
 from repro.models.stack import find_period

@@ -17,11 +17,10 @@ from __future__ import annotations
 import dataclasses
 from collections import deque
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import DHTConfig, DHTState, dht_create, dht_read, dht_write
+from repro.core import DHTConfig, dht_create, dht_read, dht_write
 from repro.core.async_sim import hash64_np
 
 KEY_WORDS = 4   # (chain_hi, chain_lo, block_index, salt)
@@ -145,12 +144,12 @@ class PrefixCache:
         if n == 0:
             return None
         kp, vp = self.pool.read(page_ids.reshape(-1))   # (B*n, L, ps, Hk, D)
-        l = kp.shape[1]
+        nl = kp.shape[1]
         ps = self.page_size
 
         def arrange(x):
-            x = x.reshape(b, n, l, ps, *x.shape[3:])
-            return jnp.moveaxis(x, 2, 0).reshape(l, b, n * ps, *x.shape[4:])
+            x = x.reshape(b, n, nl, ps, *x.shape[3:])
+            return jnp.moveaxis(x, 2, 0).reshape(nl, b, n * ps, *x.shape[4:])
 
         p_pos = jnp.broadcast_to(jnp.arange(n * ps, dtype=jnp.int32), (b, n * ps))
         return arrange(kp), arrange(vp), p_pos
@@ -160,7 +159,7 @@ class PrefixCache:
                 ks: jnp.ndarray, vs: jnp.ndarray):
         """Publish suffix KV.  ks: (L, B, S_suf, Hk, D) from prefill_collect;
         suffix starts at block `start_block` of each prompt."""
-        l, b, s_suf = ks.shape[:3]
+        nl, b, s_suf = ks.shape[:3]
         ps = self.page_size
         n_new = s_suf // ps
         if n_new == 0:
@@ -171,11 +170,11 @@ class PrefixCache:
         ids = self.pool.alloc(b * n_new)               # (B*n_new,)
         # (L,B,S,Hk,D) -> (B*n_new, L, ps, Hk, D)
         pages = jnp.moveaxis(
-            ks.reshape(l, b, n_new, ps, *ks.shape[3:]), 0, 2
-        ).reshape(b * n_new, l, ps, *ks.shape[3:])
+            ks.reshape(nl, b, n_new, ps, *ks.shape[3:]), 0, 2
+        ).reshape(b * n_new, nl, ps, *ks.shape[3:])
         vpages = jnp.moveaxis(
-            vs.reshape(l, b, n_new, ps, *vs.shape[3:]), 0, 2
-        ).reshape(b * n_new, l, ps, *vs.shape[3:])
+            vs.reshape(nl, b, n_new, ps, *vs.shape[3:]), 0, 2
+        ).reshape(b * n_new, nl, ps, *vs.shape[3:])
         self.pool.write(ids, pages, vpages)
 
         vals = np.zeros((b * n_new, VAL_WORDS), np.uint32)

@@ -1,9 +1,6 @@
 """The jitted one-token serve step lowered by the dry-run for decode shapes."""
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-
 from repro.models import decode_step, greedy_sample
 from repro.models.config import ModelConfig
 

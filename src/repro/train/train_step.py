@@ -7,8 +7,6 @@ under XLA's latency-hiding scheduler — the collective schedule is visible
 in the dry-run HLO (EXPERIMENTS.md §Roofline reads it)."""
 from __future__ import annotations
 
-from functools import partial
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -74,7 +72,6 @@ def make_train_step(model_cfg: ModelConfig, opt_cfg: AdamWConfig,
             (grads, loss_sum), _ = jax.lax.scan(body, (g0, jnp.float32(0.0)), micro)
             grads = jax.tree.map(lambda g: g / accum, grads)
             loss = loss_sum / accum
-            metrics = {}
 
         grads = maybe_compress_grads(opt_cfg, grads)
         params, opt_state, opt_metrics = apply_updates(

@@ -17,7 +17,6 @@ from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint.checkpoint import latest_step, restore, save
 from repro.data.pipeline import DataConfig, ShardInfo, get_batch

@@ -1,6 +1,5 @@
 """DHT behaviour: the paper's API semantics under all three consistency
 modes, plus property-based invariants."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -147,7 +146,6 @@ def test_property_modes_agree_on_final_state(seed, mode_):
     """All three consistency modes must produce identical logical content
     for a conflict-free batch (they differ only in cost)."""
     keys, vals = _kv(100, seed=seed)
-    outs = []
     cfg = DHTConfig(n_shards=4, buckets_per_shard=1024, mode=mode_)
     st_ = dht_create(cfg)
     st_, _ = dht_write(st_, keys, vals)

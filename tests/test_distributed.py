@@ -5,8 +5,6 @@ import subprocess
 import sys
 import textwrap
 
-import pytest
-
 ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
 
@@ -69,6 +67,67 @@ def test_sharded_dht_read_many_one_round():
         f = np.asarray(found)
         assert f[:, 0].all() and not f[:, 1:].any()
         print("read_many OK")
+    """))
+
+
+def test_sharded_execute_fn_matches_wrappers_all_modes():
+    """The op-engine closure on the shard_map/all_to_all backend must be
+    bitwise-identical to the read/write wrapper closures (which are thin
+    shims over the same engine), and its get-or-put must equal the old
+    guard-read + masked-write sequence — per consistency mode."""
+    print(_run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import DHTConfig
+        from repro.core.dht import W_SKIP, W_INSERT
+        from repro.core.distributed import ShardedDHT
+
+        mesh = jax.make_mesh((8,), ("dht",))
+        rng = np.random.default_rng(5)
+        keys = jnp.asarray(rng.integers(0, 2**31, size=(256, 20)), jnp.uint32)
+        vals = jnp.asarray(rng.integers(0, 2**31, size=(256, 26)), jnp.uint32)
+        k2 = jnp.asarray(rng.integers(0, 2**31, size=(256, 20)), jnp.uint32)
+        v2 = jnp.asarray(rng.integers(0, 2**31, size=(256, 26)), jnp.uint32)
+        ones = jnp.ones((256,), bool)
+        for mode in ("lockfree", "fine", "coarse"):
+            cfg = DHTConfig(n_shards=8, buckets_per_shard=512, mode=mode,
+                            capacity=64)
+            a = ShardedDHT.create(mesh, cfg)
+            b = ShardedDHT.create(mesh, cfg)
+            # wrappers on a
+            ws = a.write(keys, vals)
+            out_a, found_a, _ = a.read(keys)
+            # engine closures on b
+            ew = b.execute_fn(("write",))
+            er = b.execute_fn(("read",))
+            b.state, _, _, code_w, es = ew(b.state, keys, vals, ones)
+            b.state, out_b, found_b, _, _ = er(b.state, keys, vals, ones)
+            np.testing.assert_array_equal(np.asarray(ws["code"]),
+                                          np.asarray(code_w))
+            np.testing.assert_array_equal(np.asarray(out_a), np.asarray(out_b))
+            np.testing.assert_array_equal(np.asarray(found_a),
+                                          np.asarray(found_b))
+            for n in ("keys", "vals", "meta", "csum"):
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(a.state, n)),
+                    np.asarray(getattr(b.state, n)), (mode, n))
+            # get-or-put == guard-read + write-if-absent (in one round)
+            mk = jnp.concatenate([keys[:128], k2[:128]])
+            mv = jnp.concatenate([vals[:128] + 3, v2[:128]])
+            em = b.execute_fn(("migrate",))
+            b.state, gval, gfound, gcode, ges = em(b.state, mk, mv, ones)
+            out_r, found_r, _ = a.read(mk)
+            a.write(mk, mv, ones & ~found_r)
+            np.testing.assert_array_equal(np.asarray(gfound),
+                                          np.asarray(found_r))
+            np.testing.assert_array_equal(np.asarray(gval),
+                                          np.asarray(out_r))
+            assert int(jnp.sum(gcode == W_SKIP)) == 128
+            assert int(jnp.sum(gcode == W_INSERT)) == 128
+            for n in ("keys", "vals", "meta", "csum"):
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(a.state, n)),
+                    np.asarray(getattr(b.state, n)), (mode, n))
+        print("execute_fn parity OK")
     """))
 
 

@@ -1,6 +1,5 @@
 """Per-kernel validation: shape/dtype sweeps, interpret-mode Pallas vs the
 pure-jnp oracles in kernels/ref.py."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -175,3 +174,78 @@ def test_byte_window_vs_contiguous_probe_hit_parity():
     _, found, _ = ref.ref_probe(state.keys[0], state.vals[0], state.meta[0],
                                 state.csum[0], keys, base, 6)
     assert int(found.sum()) + int(ws["evicted"]) + int(ws["dropped"]) >= 250
+
+
+@pytest.mark.parametrize("n_probe", [1, 4, 6])
+@pytest.mark.parametrize("nq", [1, 16, 80])
+def test_apply_kernel_matches_oracle(n_probe, nq):
+    """Fused shard-apply: read result AND write-slot decision from one
+    window pass, bit-for-bit against the ref oracle."""
+    cfg = DHTConfig(n_shards=1, buckets_per_shard=256, n_probe=n_probe)
+    state = dht_create(cfg)
+    keys = _words(64, cfg.key_words, seed=5)
+    vals = _words(64, cfg.val_words, seed=6)
+    state, _ = dht_write(state, keys, vals)
+    queries = jnp.concatenate([keys[: nq // 2 + 1], _words(nq, cfg.key_words, 9)])[:nq]
+    hi, lo = hash64(queries)
+    base = base_bucket(lo, cfg.buckets_per_shard, cfg.n_probe)
+    sk, sv, sm, sc = state.keys[0], state.vals[0], state.meta[0], state.csum[0]
+    v_k, f_k, s_k, c_k = ops.shard_apply(sk, sv, sm, sc, queries, base,
+                                         n_probe=n_probe)
+    v_r, f_r, s_r, c_r = ref.ref_shard_apply(sk, sv, sm, sc, queries, base,
+                                             n_probe)
+    np.testing.assert_array_equal(np.asarray(f_k), np.asarray(f_r))
+    np.testing.assert_array_equal(np.asarray(v_k), np.asarray(v_r))
+    np.testing.assert_array_equal(np.asarray(s_k), np.asarray(s_r))
+    np.testing.assert_array_equal(np.asarray(c_k), np.asarray(c_r))
+
+
+def test_apply_kernel_matches_engine_slot_policy():
+    """The oracle's write lane must equal the production engine's
+    _choose_write_slot on the same gathered windows."""
+    from repro.core.hashing import probe_indices
+    from repro.core.op_engine import _choose_write_slot, _gather_window
+
+    cfg = DHTConfig(n_shards=1, buckets_per_shard=128, n_probe=6)
+    state = dht_create(cfg)
+    keys = _words(200, cfg.key_words, seed=12)   # overfull -> evictions
+    vals = _words(200, cfg.val_words, seed=13)
+    state, _ = dht_write(state, keys, vals)
+    queries = jnp.concatenate([keys[:40], _words(40, cfg.key_words, 14)])
+    hi, lo = hash64(queries)
+    base = base_bucket(lo, cfg.buckets_per_shard, cfg.n_probe)
+    slab = {"keys": state.keys[0], "vals": state.vals[0],
+            "meta": state.meta[0], "csum": state.csum[0]}
+    win = _gather_window(slab, probe_indices(base, cfg.n_probe))
+    sel_e, has_match, has_empty = _choose_write_slot(cfg, win, queries)
+    _, _, sel_k, kind_k = ops.shard_apply(
+        slab["keys"], slab["vals"], slab["meta"], slab["csum"], queries, base)
+    np.testing.assert_array_equal(np.asarray(sel_k), np.asarray(sel_e))
+    from repro.core.op_engine import W_EVICT, W_INSERT, W_UPDATE
+    kind_e = np.where(np.asarray(has_match), W_UPDATE,
+                      np.where(np.asarray(has_empty), W_INSERT, W_EVICT))
+    np.testing.assert_array_equal(np.asarray(kind_k), kind_e)
+
+
+def test_apply_kernel_checksum_reject_no_fallthrough():
+    """A corrupted selected bucket must read as not-found (tri-state),
+    while its write lane still reports the same-key UPDATE slot."""
+    from repro.core.op_engine import W_UPDATE
+
+    cfg = DHTConfig(n_shards=1, buckets_per_shard=128, n_probe=6)
+    state = dht_create(cfg)
+    keys = _words(32, cfg.key_words, seed=5)
+    vals = _words(32, cfg.val_words, seed=6)
+    state, _ = dht_write(state, keys, vals)
+    hi, lo = hash64(keys)
+    base = base_bucket(lo, cfg.buckets_per_shard, cfg.n_probe)
+    bad_csum = state.csum[0] ^ jnp.uint32(1)
+    v_k, f_k, s_k, c_k = ops.shard_apply(
+        state.keys[0], state.vals[0], state.meta[0], bad_csum, keys, base)
+    v_r, f_r, s_r, c_r = ref.ref_shard_apply(
+        state.keys[0], state.vals[0], state.meta[0], bad_csum, keys, base, 6)
+    assert not bool(f_k.any())
+    np.testing.assert_array_equal(np.asarray(f_k), np.asarray(f_r))
+    np.testing.assert_array_equal(np.asarray(v_k), np.asarray(v_r))
+    np.testing.assert_array_equal(np.asarray(s_k), np.asarray(s_r))
+    assert (np.asarray(c_k) == W_UPDATE).all()

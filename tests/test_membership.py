@@ -14,7 +14,6 @@ import textwrap
 
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import (
     DHTConfig,

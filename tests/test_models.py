@@ -7,7 +7,6 @@ import pytest
 
 from repro.configs import SHAPES, all_arch_ids, applicable, get_config, input_specs, reduced
 from repro.models import decode_step, forward, init_cache, init_lm, loss_fn
-from repro.models.model import IGNORE
 
 B, S = 2, 32
 

@@ -1,0 +1,272 @@
+"""Op-engine equivalence: the thin wrapper APIs must behave bitwise like
+the pre-engine per-kind rounds, mixed batches must equal their sequential
+decomposition under the engine's snapshot-read serialization contract,
+and dual-epoch reads must complete in ONE dispatch/collect cycle
+(DESIGN.md §8)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    DHTConfig,
+    OP_READ,
+    OP_WRITE,
+    SurrogateConfig,
+    W_EVICT,
+    W_INSERT,
+    W_SKIP,
+    dht_create,
+    dht_execute,
+    dht_read,
+    dht_read_dual,
+    dht_read_many_dual,
+    dht_write,
+    lookup_or_compute,
+    migrate_ops,
+    migration_begin,
+    migration_step,
+    mixed_ops,
+    ring_create,
+    ring_resize,
+    surrogate_create,
+)
+from repro.core import routing
+from repro.core.dht import _dht_read_dual_seq
+from repro.core.layout import MODES
+
+KW, VW = 20, 26
+
+
+def _kv(n, seed=0):
+    rng = np.random.default_rng(seed)
+    keys = jnp.asarray(rng.integers(0, 2**31, size=(n, KW)), jnp.uint32)
+    vals = jnp.asarray(rng.integers(0, 2**31, size=(n, VW)), jnp.uint32)
+    return keys, vals
+
+
+def _assert_state_equal(a, b):
+    for name in ("keys", "vals", "meta", "csum"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a, name)), np.asarray(getattr(b, name)), name)
+
+
+@pytest.fixture(params=MODES)
+def mode(request):
+    return request.param
+
+
+def test_wrapper_single_round(mode):
+    """Every wrapper is one dispatch/collect cycle."""
+    cfg = DHTConfig(n_shards=4, buckets_per_shard=512, mode=mode)
+    st = dht_create(cfg)
+    keys, vals = _kv(64)
+    routing.reset_round_count()
+    st, _ = dht_write(st, keys, vals)
+    assert routing.round_count() == 1
+    routing.reset_round_count()
+    st, _, _, _ = dht_read(st, keys)
+    assert routing.round_count() == 1
+
+
+def test_mixed_batch_equals_sequential_snapshot(mode):
+    """One mixed round == read the round-start snapshot, then write:
+    identical read results AND identical final table, bit for bit."""
+    cfg = DHTConfig(n_shards=8, buckets_per_shard=512, mode=mode)
+    st0 = dht_create(cfg)
+    keys, vals = _kv(128)
+    st0, _ = dht_write(st0, keys, vals)
+    new_k, new_v = _kv(64, seed=7)          # disjoint fresh keys
+    some_k = jnp.concatenate([keys[:32], new_k[:16]])  # hits + misses
+
+    # engine: one mixed round
+    op = jnp.concatenate([
+        jnp.full((some_k.shape[0],), OP_READ, jnp.int32),
+        jnp.full((64,), OP_WRITE, jnp.int32),
+    ])
+    ops = mixed_ops(op, jnp.concatenate([some_k, new_k]),
+                    jnp.concatenate([jnp.zeros((some_k.shape[0], VW),
+                                               jnp.uint32), new_v]))
+    routing.reset_round_count()
+    st_a, _, val_a, found_a, code_a, _ = dht_execute(
+        st0, ops, kinds=("read", "write"))
+    assert routing.round_count() == 1
+
+    # reference: sequential wrappers on the snapshot
+    st_b, val_b, found_b, _ = dht_read(st0, some_k)
+    st_b, ws = dht_write(st_b, new_k, new_v)
+
+    nq = some_k.shape[0]
+    np.testing.assert_array_equal(np.asarray(val_a[:nq]), np.asarray(val_b))
+    np.testing.assert_array_equal(np.asarray(found_a[:nq]),
+                                  np.asarray(found_b))
+    np.testing.assert_array_equal(np.asarray(code_a[nq:]),
+                                  np.asarray(ws["code"]))
+    _assert_state_equal(st_a, st_b)
+
+
+def test_migrate_op_equals_read_then_write_if_absent(mode):
+    """OP_MIGRATE (get-or-put) == the old guard-read + masked-write
+    two-round sequence, in one round."""
+    cfg = DHTConfig(n_shards=8, buckets_per_shard=512, mode=mode)
+    st0 = dht_create(cfg)
+    keys, vals = _kv(128)
+    st0, _ = dht_write(st0, keys, vals)
+    fresh_k, fresh_v = _kv(64, seed=9)
+    mk = jnp.concatenate([keys[:32], fresh_k[:32]])
+    mv = jnp.concatenate([vals[:32] + 11, fresh_v[:32]])  # stale vs fresh
+
+    routing.reset_round_count()
+    st_a, _, val_a, found_a, code_a, es = dht_execute(
+        st0, migrate_ops(mk, mv), kinds=("migrate",))
+    assert routing.round_count() == 1
+
+    st_b, val_b, found_b, _ = dht_read(st0, mk)
+    st_b, ws = dht_write(st_b, mk, mv, valid=~found_b)
+
+    np.testing.assert_array_equal(np.asarray(found_a), np.asarray(found_b))
+    np.testing.assert_array_equal(np.asarray(val_a), np.asarray(val_b))
+    _assert_state_equal(st_a, st_b)
+    # present keys skip (stored value wins), absent keys insert
+    assert int(jnp.sum(code_a == W_SKIP)) == 32
+    assert int(jnp.sum(code_a == W_INSERT)) == 32
+    st_a, out, found, _ = dht_read(st_a, keys[:32])
+    assert bool((out == vals[:32]).all()), "get-or-put must not overwrite"
+
+
+def test_dual_epoch_one_round_mid_migration(mode):
+    """During an in-flight migration a dual-epoch read is ONE dispatch and
+    bitwise-identical to the sequential two-round reference."""
+    cfg = DHTConfig(n_shards=4, buckets_per_shard=1024, mode=mode)
+    st = dht_create(cfg, ring_create(4))
+    keys, vals = _kv(256)
+    st, _ = dht_write(st, keys, vals)
+    mig = migration_begin(st, ring_resize(st.ring, 8), batch=64)
+    mig, _ = migration_step(mig)          # partially moved: both epochs live
+    assert not mig.done
+
+    routing.reset_round_count()
+    new_a, old_a, val_a, found_a, s_a = dht_read_dual(mig.new, mig.old, keys)
+    assert routing.round_count() == 1, "dual read must be one dispatch"
+
+    routing.reset_round_count()
+    new_b, old_b, val_b, found_b, s_b = _dht_read_dual_seq(
+        mig.new, mig.old, keys, jnp.ones((256,), bool))
+    assert routing.round_count() == 2
+
+    assert bool(found_a.all())
+    np.testing.assert_array_equal(np.asarray(val_a), np.asarray(val_b))
+    np.testing.assert_array_equal(np.asarray(found_a), np.asarray(found_b))
+    assert int(s_a["hits"]) == int(s_b["hits"])
+    assert int(s_a["hits_old_epoch"]) == int(s_b["hits_old_epoch"])
+    _assert_state_equal(new_a, new_b)
+    _assert_state_equal(old_a, old_b)
+
+    # multi-key dual: still one dispatch for the whole (n, m) fan-out
+    many = keys.reshape(64, 4, KW)
+    routing.reset_round_count()
+    _, _, v, f, _ = dht_read_many_dual(mig.new, mig.old, many)
+    assert routing.round_count() == 1
+    assert bool(f.all())
+    np.testing.assert_array_equal(
+        np.asarray(v.reshape(256, VW)), np.asarray(vals))
+
+
+def test_lookup_or_compute_traced_single_round_matches_host():
+    """The jitted surrogate path rides one get-or-put round and must agree
+    with the host-loop read-then-store path: same outputs, same table."""
+    scfg = SurrogateConfig(n_inputs=10, n_outputs=13,
+                           dht=DHTConfig(n_shards=4, buckets_per_shard=2048))
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.uniform(0.5, 9.5, size=(48, 10)), jnp.float32)
+
+    def compute(v):
+        return jnp.concatenate([v * 2.0, v[:, :3] + 1.0], axis=1)
+
+    st_h = surrogate_create(scfg)
+    st_h, _, _, _ = lookup_or_compute(scfg, st_h, x[:32], compute)  # warm
+    st_t = jax.tree.map(lambda a: a, st_h)
+
+    st_h, out_h, found_h, s_h = lookup_or_compute(scfg, st_h, x, compute)
+
+    routing.reset_round_count()
+    jitted = jax.jit(
+        lambda s, v: lookup_or_compute(scfg, s, v, compute))
+    st_t, out_t, found_t, s_t = jitted(st_t, x)
+    assert routing.round_count() == 1, "traced path must be one round"
+
+    np.testing.assert_array_equal(np.asarray(out_h), np.asarray(out_t))
+    np.testing.assert_array_equal(np.asarray(found_h), np.asarray(found_t))
+    for k in ("hits", "misses", "stored"):
+        assert int(s_h[k]) == int(s_t[k]), k
+    _assert_state_equal(st_h, st_t)
+
+
+def test_engine_rejects_missing_value_lane():
+    cfg = DHTConfig(n_shards=2, buckets_per_shard=64)
+    st = dht_create(cfg)
+    keys, _ = _kv(8)
+    from repro.core import OpBatch
+    with pytest.raises(AssertionError):
+        dht_execute(st, OpBatch(keys=keys, valid=jnp.ones((8,), bool)),
+                    kinds=("write",))
+
+
+def test_eviction_accounting_migrate(mode):
+    """Get-or-put under destination pressure surfaces W_EVICT like a
+    plain write (cache semantics, never silent loss)."""
+    cfg = DHTConfig(n_shards=1, buckets_per_shard=8, n_probe=4, mode=mode)
+    st = dht_create(cfg)
+    keys, vals = _kv(100)
+    st, _, _, found, code, _ = dht_execute(
+        st, migrate_ops(keys, vals), kinds=("migrate",))
+    assert int(jnp.sum(code == W_EVICT)) > 0
+    assert not bool(found.any())
+
+
+def test_lookup_interpolate_or_compute_traced_one_mixed_round():
+    """The jitted neighborhood path rides ONE mixed round (n*M stencil
+    reads + n center get-or-puts) and must agree with the host path on
+    outputs and provenance.  Deliberate divergence (DESIGN.md §8): the
+    traced path publishes computed outputs for interpolated rows too
+    (ground truth), the host path only for PROV_MISS rows."""
+    from repro.core import (InterpConfig, PROV_EXACT, PROV_MISS,
+                            lookup_interpolate_or_compute)
+
+    scfg = SurrogateConfig(n_inputs=10, n_outputs=13,
+                           dht=DHTConfig(n_shards=4, buckets_per_shard=4096))
+    rng = np.random.default_rng(21)
+    x = jnp.asarray(rng.uniform(0.5, 9.5, size=(24, 10)), jnp.float32)
+
+    def compute(v):
+        return jnp.concatenate([v * 3.0, v[:, :3] - 1.0], axis=1)
+
+    icfg = InterpConfig(radius=1)
+    st_h = surrogate_create(scfg)
+    st_h, _, _, _ = lookup_interpolate_or_compute(scfg, st_h, x[:16], compute,
+                                                 icfg)  # warm partial
+    st_t = jax.tree.map(lambda a: a, st_h)
+
+    st_h, out_h, prov_h, s_h = lookup_interpolate_or_compute(
+        scfg, st_h, x, compute, icfg)
+
+    routing.reset_round_count()
+    jitted = jax.jit(
+        lambda s, v: lookup_interpolate_or_compute(scfg, s, v, compute, icfg))
+    st_t, out_t, prov_t, s_t = jitted(st_t, x)
+    assert routing.round_count() == 1, "traced path must be one mixed round"
+
+    np.testing.assert_array_equal(np.asarray(prov_h), np.asarray(prov_t))
+    np.testing.assert_array_equal(np.asarray(out_h), np.asarray(out_t))
+    for k in ("exact", "interpolated", "misses", "probe_hits"):
+        assert int(s_h[k]) == int(s_t[k]), k
+    # traced stores ground truth for every center-absent row (miss + interp);
+    # host stores only the PROV_MISS rows
+    assert int(s_t["stored"]) >= int(s_h["stored"])
+    n_center_absent = int(jnp.sum(prov_h != PROV_EXACT))
+    assert int(s_t["stored"]) == n_center_absent
+    # both tables serve every key exactly afterwards
+    for st in (st_h, st_t):
+        st2, out2, prov2, _ = lookup_interpolate_or_compute(
+            scfg, st, x, compute, icfg)
+        assert not bool((np.asarray(prov2) == PROV_MISS).any())

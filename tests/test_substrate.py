@@ -1,6 +1,5 @@
 """Data pipeline, checkpointing (incl. elastic DHT rehash), trainer
 fault-tolerance, serving engine, memoization."""
-import os
 import tempfile
 
 import jax
@@ -36,7 +35,6 @@ def test_data_determinism_and_sharding():
 
 def test_straggler_reassignment_covers_everything():
     cfg = DataConfig(vocab_size=512, seq_len=16, global_batch=12)
-    shard = ShardInfo(0, 4)
     dead = 2
     covered = []
     for s in range(4):

@@ -1,8 +1,6 @@
 """Surrogate-cache semantics + async torn-read simulator (paper Tables 2/4)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import (
     DHTConfig,

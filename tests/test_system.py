@@ -1,9 +1,6 @@
 """End-to-end behaviour tests for the paper's system: the POET-analogue
 coupled reactive-transport simulation with the DHT surrogate (paper §5.4)."""
-import jax
-import jax.numpy as jnp
 import numpy as np
-import pytest
 
 
 def test_poet_sim_with_and_without_dht_agree():
