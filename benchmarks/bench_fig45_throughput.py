@@ -52,7 +52,8 @@ def run(quick: bool = True):
                 t_r, (_, _, found, rstats) = time_fn(
                     lambda: read(filled, keys), iters=2, warmup=1)
                 w_rounds = float(wstats["rounds"])
-                for op, t in (("read", t_r), ("write", t_w)):
+                for op, t, st in (("read", t_r, rstats),
+                                  ("write", t_w, wstats)):
                     rounds = w_rounds if op == "write" else (
                         0.0 if mode == "lockfree" else 1.0)
                     rts = _rts_per_op(mode, op, rounds)
@@ -61,7 +62,9 @@ def run(quick: bool = True):
                         f"fig45/{dist}/{op}/{mode}/shards{s}",
                         t / n * 1e6,
                         f"measured_mops={n / t / 1e6:.3f};"
-                        f"modeled_mops_640={d / 1e6:.2f};rounds={rounds:.0f}",
+                        f"modeled_mops_640={d / 1e6:.2f};rounds={rounds:.0f};"
+                        f"bytes_per_op={4 * float(st['wire_words']) / n:.1f};"
+                        f"fill_frac={float(st['fill_frac']):.3f}",
                     ))
     return rows
 

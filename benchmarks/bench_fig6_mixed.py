@@ -91,7 +91,9 @@ def run(quick: bool = True):
                 f"rounds_legacy={rounds_legacy};"
                 f"rounds_engine={rounds_engine};"
                 f"round_ratio={rounds_legacy / max(rounds_engine, 1):.1f};"
-                f"write_rounds={wrounds:.0f}",
+                f"write_rounds={wrounds:.0f};"
+                f"bytes_per_op={4 * float(es['wire_words']) / n_ops:.1f};"
+                f"fill_frac={float(es['fill_frac']):.3f}",
             ))
     return rows
 

@@ -1,12 +1,17 @@
 """Kernel microbenchmarks: interpret-mode Pallas vs the jnp oracle, with
 derived TPU estimates (the kernels are TPU-targeted; interpret mode on CPU
-validates semantics, not speed)."""
+validates semantics, not speed), plus the routing-substrate microbench —
+sort-based vs legacy one-hot binning and count-driven vs legacy 4× factor
+capacity, both measured for real on CPU (pure jnp, no interpret-mode
+penalty)."""
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import DHTConfig, dht_create, dht_write
+from repro.core import routing
 from repro.core.hashing import base_bucket, hash64
 from repro.kernels import ops, ref
 
@@ -21,8 +26,56 @@ def _derived_tpu(bytes_touched: int, flops: int) -> str:
     return f"tpu_est_us={t * 1e6:.2f};bytes={bytes_touched};flops={flops}"
 
 
-def run(quick: bool = True):
+def _routing_rows(quick: bool) -> list[Row]:
+    """Sort-based vs one-hot binning (CPU wall — these are jnp paths, so
+    the measured win is real, unlike interpret-mode kernel timings), with
+    bit-for-bit parity asserted inside the timing harness, plus the
+    count-driven capacity's buffer-word saving at S=32 uniform."""
     rows = []
+    combos = [(8, 4096), (64, 4096), (640, 4096), (64, 65536)]
+    if not quick:
+        combos += [(8, 65536), (640, 65536)]
+    rng = np.random.default_rng(3)
+    for s, n in combos:
+        dest = jnp.asarray(rng.integers(0, s, size=n), jnp.int32)
+        cap = routing.auto_capacity(n, s)
+        sort_fn = jax.jit(lambda d: routing.bin_by_dest(d, s, cap).pos)
+        onehot_fn = jax.jit(lambda d: routing.bin_by_dest_onehot(d, s, cap).pos)
+        t_sort, p_sort = time_fn(lambda: sort_fn(dest), iters=3)
+        t_onehot, p_onehot = time_fn(lambda: onehot_fn(dest), iters=3)
+        parity = bool((np.asarray(p_sort) == np.asarray(p_onehot)).all())
+        rows.append(Row(
+            f"routing/bin/onehot/S{s}/n{n}", t_onehot / n * 1e6,
+            f"wall_us={t_onehot * 1e6:.1f}"))
+        rows.append(Row(
+            f"routing/bin/sort/S{s}/n{n}", t_sort / n * 1e6,
+            f"wall_us={t_sort * 1e6:.1f};"
+            f"speedup_vs_onehot={t_onehot / t_sort:.2f}x;"
+            f"parity={'ok' if parity else 'MISMATCH'}"))
+
+    # capacity: dispatched buffer words, legacy 4x factor vs count-driven
+    s, n = 32, 4096 if quick else 65536
+    dest = jnp.asarray(rng.integers(0, s, size=n), jnp.int32)
+    lanes = 20 + 1 + 1                      # keys + base + valid (read round)
+    cap_legacy = routing.auto_capacity(n, s)
+    cap_tight = routing.plan_capacity(dest, s)
+    def words(c):
+        return s * c * lanes
+
+    def fill(c):
+        return 1.0 - n / (s * c)
+    rows.append(Row(
+        f"routing/capacity/S{s}/uniform", 0.0,
+        f"n={n};cap_legacy={cap_legacy};cap_tight={cap_tight};"
+        f"words_legacy={words(cap_legacy)};words_tight={words(cap_tight)};"
+        f"words_ratio={words(cap_legacy) / words(cap_tight):.2f};"
+        f"fill_frac_legacy={fill(cap_legacy):.3f};"
+        f"fill_frac_tight={fill(cap_tight):.3f}"))
+    return rows
+
+
+def run(quick: bool = True):
+    rows = _routing_rows(quick)
     n = 4096 if quick else 65536
     rng = np.random.default_rng(0)
     keys = jnp.asarray(rng.integers(0, 2**31, size=(n, 20)), jnp.uint32)

@@ -83,6 +83,8 @@ def dht_write(
         "rounds": es["rounds"],
         "lock_tokens": es["lock_tokens"],
         "epoch": es["epoch"],
+        "wire_words": es["wire_words"],
+        "fill_frac": es["fill_frac"],
         "code": code,
     }
     return state, stats
@@ -109,6 +111,8 @@ def dht_read(
         "dropped": es["dropped"],
         "lock_tokens": es["lock_tokens"],
         "epoch": es["epoch"],
+        "wire_words": es["wire_words"],
+        "fill_frac": es["fill_frac"],
     }
     return state, vals, found, stats
 
@@ -197,6 +201,8 @@ def _dht_read_dual_seq(
         "dropped": s_new["dropped"] + s_old["dropped"],
         "lock_tokens": s_new["lock_tokens"] + s_old["lock_tokens"],
         "epoch": s_new["epoch"],
+        "wire_words": s_new["wire_words"] + s_old["wire_words"],
+        "fill_frac": (s_new["fill_frac"] + s_old["fill_frac"]) * 0.5,
         "hits_old_epoch": s_old["hits"],
     }
     return state, prev, vals, found, stats
@@ -255,6 +261,8 @@ def dht_read_dual(
         "dropped": es["dropped"],
         "lock_tokens": es["lock_tokens"],
         "epoch": es["epoch"],
+        "wire_words": es["wire_words"],
+        "fill_frac": es["fill_frac"],
         "hits_old_epoch": jnp.sum(fnd2[:, 1] & ~fnd2[:, 0]).astype(jnp.int32),
     }
     return state, prev, vals, fnd, stats

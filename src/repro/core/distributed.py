@@ -36,6 +36,8 @@ def _psum_stats(stats: dict, axes) -> dict:
             out[k] = v  # per-item, stays sharded
         elif k in ("rounds", "epoch"):
             out[k] = jax.lax.pmax(v, axes)  # replicated/uniform scalars
+        elif k == "fill_frac":
+            out[k] = jax.lax.pmean(v, axes)  # per-device fraction -> mean
         else:
             out[k] = jax.lax.psum(v, axes)
     return out
@@ -59,6 +61,24 @@ class ShardedDHT:
     mesh: Mesh
     cfg: DHTConfig
     state: DHTState
+    # keyed closure cache: (op name, cfg, ring-presence[, extras]) -> jitted
+    # shard_map closure — a fresh wrapper per call would retrace every time
+    _fn_cache: dict = dataclasses.field(default_factory=dict, repr=False)
+
+    def _cached_fn(self, name: str, maker, state: DHTState | None = None,
+                   extra: tuple = ()):
+        """Every hot wrapper (read/write/read_many/execute) fetches its
+        jitted closure from here; the key captures exactly the structural
+        inputs a retrace depends on — the table cfg (capacity included,
+        so count-driven capacity buckets each get one trace) and whether
+        a membership ring is attached."""
+        state = self.state if state is None else state
+        key = (name, state.cfg, state.ring is None) + tuple(extra)
+        fn = self._fn_cache.get(key)
+        if fn is None:
+            fn = maker()
+            self._fn_cache[key] = fn
+        return fn
 
     @classmethod
     def create(cls, mesh: Mesh, cfg: DHTConfig, ring=None) -> "ShardedDHT":
@@ -91,7 +111,8 @@ class ShardedDHT:
 
         stats_spec = {k: (batch_spec if k == "code" else P())
                       for k in ("inserted", "updated", "evicted", "dropped",
-                                "rounds", "lock_tokens", "epoch", "code")}
+                                "rounds", "lock_tokens", "epoch",
+                                "wire_words", "fill_frac", "code")}
         return jax.jit(
             shard_map(
                 fn, mesh=self.mesh,
@@ -110,7 +131,7 @@ class ShardedDHT:
 
         stats_spec = {k: P() for k in
                       ("hits", "misses", "mismatches", "dropped",
-                       "lock_tokens", "epoch")}
+                       "lock_tokens", "epoch", "wire_words", "fill_frac")}
         return jax.jit(
             shard_map(
                 fn, mesh=self.mesh,
@@ -139,7 +160,7 @@ class ShardedDHT:
 
         stats_spec = {k: P() for k in
                       ("mismatches", "rounds", "lock_tokens", "dropped",
-                       "epoch")}
+                       "epoch", "wire_words", "fill_frac")}
         return jax.jit(
             shard_map(
                 fn, mesh=self.mesh,
@@ -161,7 +182,7 @@ class ShardedDHT:
 
         stats_spec = {k: P() for k in
                       ("hits", "misses", "mismatches", "dropped",
-                       "lock_tokens", "epoch")}
+                       "lock_tokens", "epoch", "wire_words", "fill_frac")}
         return jax.jit(
             shard_map(
                 fn, mesh=self.mesh,
@@ -176,15 +197,17 @@ class ShardedDHT:
             NamedSharding(self.mesh, P(mesh_axes(self.mesh))),
         )
 
-    # convenience stateful wrappers
+    # convenience stateful wrappers (closures come from the keyed cache)
     def write(self, keys, vals, valid=None):
         valid = self._ones(keys.shape[0]) if valid is None else valid
-        self.state, stats = self.write_fn()(self.state, keys, vals, valid)
+        fn = self._cached_fn("write", self.write_fn)
+        self.state, stats = fn(self.state, keys, vals, valid)
         return stats
 
     def read(self, keys, valid=None):
         valid = self._ones(keys.shape[0]) if valid is None else valid
-        self.state, vals, found, stats = self.read_fn()(self.state, keys, valid)
+        fn = self._cached_fn("read", self.read_fn)
+        self.state, vals, found, stats = fn(self.state, keys, valid)
         return vals, found, stats
 
     def read_many(self, keys, valid=None):
@@ -192,15 +215,8 @@ class ShardedDHT:
             valid = jax.device_put(
                 jnp.ones(keys.shape[:2], bool),
                 NamedSharding(self.mesh, P(mesh_axes(self.mesh))))
-        # cache the jitted closure: this is the neighborhood-query hot path
-        # and a fresh shard_map wrapper per call would retrace every time
-        # (keyed on ring presence — the only structural state change)
-        key = self.state.ring is None
-        cached = getattr(self, "_read_many_cache", None)
-        if cached is None or cached[0] != key:
-            cached = (key, self.read_many_fn())
-            self._read_many_cache = cached
-        self.state, vals, found, stats = cached[1](self.state, keys, valid)
+        fn = self._cached_fn("read_many", self.read_many_fn)
+        self.state, vals, found, stats = fn(self.state, keys, valid)
         return vals, found, stats
 
     # -- elastic membership (DESIGN.md §4-5) ------------------------------
@@ -228,7 +244,9 @@ class ShardedDHT:
                              self.state.meta, self.state.csum, new_ring)
         new_state = jax.device_put(
             new_state, _state_shardings(self.mesh, new_state))
-        efn = self.execute_fn(("migrate",), new_state)
+        efn = self._cached_fn(
+            "execute", lambda: self.execute_fn(("migrate",), new_state),
+            state=new_state, extra=(("migrate",),))
 
         kw, vw = self.cfg.key_words, self.cfg.val_words
         src_keys = np.asarray(self.state.keys).reshape(-1, kw)

@@ -195,9 +195,11 @@ def migration_step(mig: Migration) -> tuple[Migration, dict[str, int]]:
     keys = jnp.reshape(old.keys, (-1, kw))[pad]
     vals = jnp.reshape(old.vals, (-1, vw))[pad]
 
-    # migration traffic gets routing capacity == batch so it can never
-    # drop, without narrowing the capacity of concurrent app traffic
-    cfg_step = dataclasses.replace(mig.new.cfg, capacity=mig.batch)
+    # migration traffic clears any app-level capacity so the eager
+    # count-exchange prologue sizes the round to the actual max bin load
+    # (routing.plan_capacity: capacity >= load, so it can never drop)
+    # without narrowing the capacity of concurrent app traffic
+    cfg_step = dataclasses.replace(mig.new.cfg, capacity=0)
     st = DHTState(cfg_step, mig.new.keys, mig.new.vals, mig.new.meta,
                   mig.new.csum, mig.new.ring)
     # OP_MIGRATE = presence guard + insert in one round: keys already

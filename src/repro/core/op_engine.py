@@ -148,19 +148,14 @@ def dual_fusable(cfg: DHTConfig, prev_cfg: DHTConfig) -> bool:
 # shard-side machinery
 # ---------------------------------------------------------------------------
 
-def _conflict_rank(group: jnp.ndarray, valid: jnp.ndarray) -> jnp.ndarray:
+def _conflict_rank(group: jnp.ndarray, valid: jnp.ndarray,
+                   n_groups: int | None = None) -> jnp.ndarray:
     """Rank of each valid item among items of the same conflict group
-    (stable in item order).  O(C log C), no group-sized tensors."""
-    c = group.shape[0]
-    iota = jnp.arange(c, dtype=jnp.int32)
-    g = jnp.where(valid, group.astype(jnp.int32), jnp.int32(2**30))
-    order = jnp.argsort(g, stable=True)
-    gs = g[order]
-    new_run = jnp.concatenate([jnp.ones((1,), bool), gs[1:] != gs[:-1]])
-    run_start = jax.lax.cummax(jnp.where(new_run, iota, 0))
-    rank_sorted = iota - run_start
-    rank = jnp.zeros((c,), jnp.int32).at[order].set(rank_sorted)
-    return jnp.where(valid, rank, 0)
+    (stable in item order).  One definition for the whole substrate:
+    this is the same sort-based rank that bins routing destinations and
+    MoE tokens (``routing.stable_rank_by_group``); a caller that bounds
+    the group ids gets the packed single-sort fast path."""
+    return routing.stable_rank_by_group(group, valid, n_groups=n_groups)
 
 
 def _gather_window(slab: dict[str, jnp.ndarray], idx: jnp.ndarray):
@@ -328,7 +323,7 @@ def _locked_write_rounds(cfg: DHTConfig, slab, base, keys, vals, valid, axis_nam
         group = base                      # per-bucket lock granularity
     else:
         group = jnp.zeros_like(base)      # whole-window lock
-    rank = _conflict_rank(group, valid)
+    rank = _conflict_rank(group, valid, n_groups=cfg.buckets_per_shard)
     rounds = jnp.max(jnp.where(valid, rank, -1)) + 1
     if axis_name is not None:
         # uniform trip count across devices — collectives live in the body
@@ -473,7 +468,16 @@ def _route_ops(state: DHTState, prev: DHTState | None, ops: OpBatch,
         dest = jnp.where(in_prev, dest_prev, dest)
         base = jnp.where(in_prev, base_prev, base)
     n = ops.keys.shape[0]
-    cap = capacity or cfg.capacity or routing.auto_capacity(n, cfg.n_shards)
+    cap = capacity or cfg.capacity
+    if not cap:
+        if isinstance(dest, jax.core.Tracer):
+            # traced: buffer shapes must be fixed before the trace, so the
+            # static expected-load heuristic stands in
+            cap = routing.auto_capacity(n, cfg.n_shards)
+        else:
+            # eager: count-exchange prologue — tight pow-2-bucketed
+            # capacity from the actual max bin load (zero drops)
+            cap = routing.plan_capacity(dest, cfg.n_shards)
     binned = routing.bin_by_dest(dest, cfg.n_shards, cap, epoch=epoch)
     return binned, base
 
@@ -603,12 +607,18 @@ def dht_execute(
     found_out = (found_b > 0) & ops.valid & binned.kept
     val_out = jnp.where(found_out[:, None], val_b, jnp.uint32(0))
     code_out = jnp.where(ops.valid & binned.kept, code_b, W_DROPPED)
+    # wire accounting: both legs' buffer words + the padding fraction
+    # (reply leg lanes: value words + found + code)
+    wire = routing.wire_stats(
+        binned, routing.lane_width(payloads), cfg.val_words + 2)
     estats = {
         "mismatches": n_mm.astype(jnp.int32),
         "rounds": rounds.astype(jnp.int32),
         "lock_tokens": tok.astype(jnp.int32),
         "dropped": binned.n_dropped,
         "epoch": binned.epoch,
+        "wire_words": wire["wire_words"],
+        "fill_frac": wire["fill_frac"],
     }
     state_out = _state_from(state, slab)
     if prev is None:

@@ -173,6 +173,8 @@ def _interp_tail(cfg: SurrogateConfig, inputs, points, val_words, found,
         "mismatches": transport_stats["mismatches"],
         "dropped": transport_stats["dropped"],
         "epoch": transport_stats["epoch"],
+        "wire_words": transport_stats["wire_words"],
+        "fill_frac": transport_stats["fill_frac"],
     }
     return outputs, provenance, stats
 

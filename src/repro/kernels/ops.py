@@ -52,6 +52,24 @@ def shard_apply(slab_keys, slab_vals, slab_meta, slab_csum, qkeys, base,
     )
 
 
+def route_pack(mat, inv, fill_row, *, interpret: bool | None = None):
+    from .route_kernel import route_pack_pallas
+
+    return route_pack_pallas(
+        mat, inv, fill_row,
+        interpret=_default_interpret() if interpret is None else interpret,
+    )
+
+
+def route_unpack(buf, slot, kept, fill_row, *, interpret: bool | None = None):
+    from .route_kernel import route_unpack_pallas
+
+    return route_unpack_pallas(
+        buf, slot, kept, fill_row,
+        interpret=_default_interpret() if interpret is None else interpret,
+    )
+
+
 def round_sig(x, sig_digits, *, interpret: bool | None = None):
     return round_sig_pallas(
         x, sig_digits,

@@ -152,6 +152,24 @@ def ref_murmur32(words: jnp.ndarray, seed: int) -> jnp.ndarray:
     return murmur32_words(words, seed)
 
 
+def ref_route_pack(mat: jnp.ndarray, inv: jnp.ndarray,
+                   fill_row: jnp.ndarray) -> jnp.ndarray:
+    """Oracle for the fused routing pack kernel: (n, L) item lanes ->
+    (rows, L) bin-ordered send buffer via the inverse permutation ``inv``
+    (bin row -> item index, -1 = fill) — exactly the gather formulation
+    the production ``core/routing._scatter_to_bins`` jnp path runs."""
+    picked = mat[jnp.maximum(inv, 0)]
+    return jnp.where((inv >= 0)[:, None], picked, fill_row[None, :])
+
+
+def ref_route_unpack(buf: jnp.ndarray, slot: jnp.ndarray, kept: jnp.ndarray,
+                     fill_row: jnp.ndarray) -> jnp.ndarray:
+    """Oracle for the fused routing unpack kernel: (rows, L) bin-ordered
+    reply buffer -> (n, L) item order; overflowed items (``kept == 0``)
+    get the fill row (``core/routing._gather_from_bins``)."""
+    return jnp.where((kept != 0)[:, None], buf[slot], fill_row[None, :])
+
+
 def ref_stencil_keys(
     x: jnp.ndarray, sig_digits: int, key_words: int, *,
     radius: int = 1, coarse_tier: bool = True,

@@ -1,10 +1,10 @@
 """Mixture-of-Experts layer with capacity-factor token dispatch.
 
 The dispatch machinery is the same sort-based capacity binning the DHT
-router uses (``repro.core.op_engine._conflict_rank`` — one substrate, two
-clients, per DESIGN.md §6): tokens are ranked within their expert bin and
-dropped past capacity (standard switch-style semantics; dropped tokens
-pass through the residual).
+router uses (``repro.core.routing.stable_rank_by_group`` — one substrate,
+two clients, per DESIGN.md §3): tokens are ranked within their expert bin
+and dropped past capacity (standard switch-style semantics; dropped
+tokens pass through the residual).
 
 Sharding layout: token groups ride the data axes, experts ride the model
 axis, so expert compute is local per (data, model) mesh cell after the
@@ -18,7 +18,7 @@ import math
 import jax
 import jax.numpy as jnp
 
-from repro.core.op_engine import _conflict_rank
+from repro.core.routing import stable_rank_by_group
 from .layers import _init_dense
 
 
@@ -73,7 +73,7 @@ def moe_forward(params, cfg, x, *, n_groups: int = 32):
     # per-group positions within each expert bin (sort-based, shared w/ DHT)
     dest = idx_k.reshape(g, sg * k)
     pos = jax.vmap(
-        lambda d: _conflict_rank(d, jnp.ones_like(d, dtype=bool)))(dest)
+        lambda d: stable_rank_by_group(d, n_groups=nx))(dest)
     kept = pos < cap
 
     slot = dest * cap + jnp.minimum(pos, cap - 1)                 # (g, sg*k)

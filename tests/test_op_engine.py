@@ -202,6 +202,26 @@ def test_lookup_or_compute_traced_single_round_matches_host():
     _assert_state_equal(st_h, st_t)
 
 
+def test_engine_wire_accounting_mixed_round():
+    """A mixed batch reports its wire footprint: buffer words for both
+    legs of the ONE round, and the padding fraction of the eager
+    count-driven capacity stays within the pow-2 bucket bound."""
+    cfg = DHTConfig(n_shards=8, buckets_per_shard=512)
+    st = dht_create(cfg)
+    keys, vals = _kv(256)
+    op = jnp.where(jnp.arange(256) % 2 == 0, OP_READ, OP_WRITE)
+    routing.reset_round_count()
+    st, _, _, _, _, es = dht_execute(
+        st, mixed_ops(op, keys, vals), kinds=("read", "write"))
+    assert routing.round_count() == 1
+    # send: base + keys + vals + op + valid; reply: vals + found + code
+    lanes = (1 + KW + VW + 1 + 1) + (VW + 1 + 1)
+    rows = int(es["wire_words"]) // lanes
+    assert rows % 8 == 0 and rows >= 256
+    assert 0.0 <= float(es["fill_frac"]) <= 0.5 + 1e-6
+    assert int(es["dropped"]) == 0
+
+
 def test_engine_rejects_missing_value_lane():
     cfg = DHTConfig(n_shards=2, buckets_per_shard=64)
     st = dht_create(cfg)

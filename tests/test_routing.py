@@ -1,0 +1,217 @@
+"""Routing substrate: sort-based binning parity vs the legacy one-hot
+oracle, count-driven capacity, fused multi-lane dispatch/collect with
+unified fill semantics, and wire accounting (DESIGN.md §3)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import DHTConfig, dht_create, dht_read, dht_write, routing
+
+
+def _dests(kind: str, n: int, s: int, seed: int = 0) -> jnp.ndarray:
+    rng = np.random.default_rng(seed)
+    if kind == "uniform":
+        d = rng.integers(0, s, size=n)
+    elif kind == "zipf":
+        d = rng.zipf(1.1, size=n) % s
+    else:  # adversarial: every item to one shard
+        d = np.full(n, s - 1)
+    return jnp.asarray(d, jnp.int32)
+
+
+@pytest.mark.parametrize("kind", ["uniform", "zipf", "same"])
+@pytest.mark.parametrize("n,s,cap", [(1, 4, 16), (257, 8, 8), (1000, 32, 64),
+                                     (512, 640, 16)])
+def test_sort_binning_matches_onehot_bitwise(kind, n, s, cap):
+    """pos/kept/dest/n_dropped of the O(n log n) sort path must equal the
+    legacy one-hot path bit for bit, including under overflow."""
+    dest = _dests(kind, n, s, seed=n + s)
+    a = routing.bin_by_dest(dest, s, cap)
+    b = routing.bin_by_dest_onehot(dest, s, cap)
+    np.testing.assert_array_equal(np.asarray(a.pos), np.asarray(b.pos))
+    np.testing.assert_array_equal(np.asarray(a.kept), np.asarray(b.kept))
+    np.testing.assert_array_equal(np.asarray(a.dest), np.asarray(b.dest))
+    assert int(a.n_dropped) == int(b.n_dropped)
+
+
+def test_stable_rank_matches_moe_and_engine_semantics():
+    """One rank definition for the whole substrate: with a validity mask,
+    invalid items rank 0 and do not occupy positions."""
+    group = jnp.asarray([3, 1, 3, 3, 1, 0], jnp.int32)
+    valid = jnp.asarray([1, 1, 0, 1, 1, 1], bool)
+    rank = routing.stable_rank_by_group(group, valid)
+    np.testing.assert_array_equal(np.asarray(rank), [0, 0, 0, 1, 1, 0])
+    rank_all = routing.stable_rank_by_group(group)
+    np.testing.assert_array_equal(np.asarray(rank_all), [0, 0, 1, 2, 1, 0])
+
+
+def test_packed_sort_key_matches_stable_argsort_fallback():
+    """The uint32 packed-key fast path (group id bounded) must rank
+    identically to the generic stable-argsort fallback, valid mask
+    included."""
+    rng = np.random.default_rng(7)
+    group = jnp.asarray(rng.integers(0, 37, size=5000), jnp.int32)
+    valid = jnp.asarray(rng.integers(0, 2, size=5000), bool)
+    packed = routing.stable_rank_by_group(group, valid, n_groups=37)
+    fallback = routing.stable_rank_by_group(group, valid)
+    np.testing.assert_array_equal(np.asarray(packed), np.asarray(fallback))
+    packed_nv = routing.stable_rank_by_group(group, n_groups=37)
+    fallback_nv = routing.stable_rank_by_group(group)
+    np.testing.assert_array_equal(np.asarray(packed_nv),
+                                  np.asarray(fallback_nv))
+
+
+def test_dispatch_collect_roundtrip_multi_lane():
+    """All payloads of a round ride one fused lane matrix; every kept item
+    round-trips its payload exactly — int32, multi-word uint32, and bool
+    lanes alike."""
+    rng = np.random.default_rng(1)
+    dest = _dests("uniform", 200, 8, seed=2)
+    b = routing.bin_by_dest(dest, 8, routing.plan_capacity(dest, 8))
+    assert int(b.n_dropped) == 0
+    payloads = [
+        jnp.arange(200, dtype=jnp.int32),
+        jnp.asarray(rng.integers(0, 2**32, size=(200, 5), dtype=np.uint64),
+                    jnp.uint32),
+        jnp.asarray(rng.integers(0, 2, size=200), bool),
+    ]
+    parts = routing.dispatch(b, payloads, None)
+    assert [p.dtype for p in parts] == [p.dtype for p in payloads]
+    back = routing.collect(b, parts, None)
+    for orig, rt in zip(payloads, back):
+        np.testing.assert_array_equal(np.asarray(orig), np.asarray(rt))
+
+
+def test_fill_semantics_unified_both_legs():
+    """Satellite regression: non-zero fills plumb through BOTH legs with
+    identical cast-through-dtype semantics — dispatch pads empty buffer
+    slots with the payload's fill, collect returns the fill to overflowed
+    items (bool and uint32 lanes included)."""
+    dest = jnp.asarray([0, 0, 0, 1], jnp.int32)
+    b = routing.bin_by_dest(dest, 2, 2)          # item 2 overflows bin 0
+    assert int(b.n_dropped) == 1
+    pay_u = jnp.asarray([10, 11, 12, 13], jnp.uint32)
+    pay_b = jnp.asarray([True, True, True, True], bool)
+    parts = routing.dispatch(b, [pay_u, pay_b], None, fills=(7, True))
+    # dispatch leg: bin 1 slot 1 is empty -> per-payload fill, cast
+    u, bl = np.asarray(parts[0]), np.asarray(parts[1])
+    assert u[1, 1] == 7 and bl[1, 1]
+    # the overflowed item must NOT clobber any kept slot
+    assert set(u[0]) == {10, 11} and u[1, 0] == 13
+    # collect leg: overflowed item gets its per-payload fill, cast
+    back = routing.collect(b, parts, None, fills=(99, True))
+    bu, bb = np.asarray(back[0]), np.asarray(back[1])
+    np.testing.assert_array_equal(bu, [10, 11, 99, 13])
+    np.testing.assert_array_equal(bb, [True, True, True, True])
+    # a False bool fill survives the uint32 lane round trip as False
+    back2 = routing.collect(b, parts, None, fills=(0, False))
+    assert not np.asarray(back2[1])[2]
+
+
+def test_overflow_kept_items_always_delivered():
+    """Adversarial all-same-dest overflow: the dropped items' sentinel row
+    must never clobber the last kept bin slot (the legacy clamp-to-last-
+    row scatter lost bin (S-1, cap-1) whenever a later item overflowed)."""
+    n, s, cap = 64, 4, 8
+    dest = jnp.full((n,), s - 1, jnp.int32)      # all to the LAST shard
+    b = routing.bin_by_dest(dest, s, cap)
+    assert int(b.n_dropped) == n - cap
+    payload = jnp.arange(n, dtype=jnp.int32) + 100
+    (part,) = routing.dispatch(b, [payload], None)
+    # every kept item sits in its slot, including the last one
+    np.testing.assert_array_equal(
+        np.asarray(part)[s - 1], np.asarray(payload)[:cap])
+    (back,) = routing.collect(b, [part], None, fills=(-1,))
+    np.testing.assert_array_equal(
+        np.asarray(back), np.where(np.arange(n) < cap,
+                                   np.asarray(payload), -1))
+
+
+def test_count_driven_capacity_zipf_and_uniform():
+    """Count-driven capacity: zero drops for uniform keys, and strictly
+    fewer drops than the legacy 4x-factor path under zipf(1.1) hot keys —
+    while staying on the pow-2 bucket lattice."""
+    n, s = 4096, 64
+    for kind in ("uniform", "zipf"):
+        dest = _dests(kind, n, s, seed=5)
+        cap_tight = routing.plan_capacity(dest, s)
+        cap_legacy = routing.auto_capacity(n, s)
+        tight = routing.bin_by_dest(dest, s, cap_tight)
+        legacy = routing.bin_by_dest(dest, s, cap_legacy)
+        assert int(tight.n_dropped) == 0, kind
+        if kind == "zipf":
+            # the hot bin blows through 4x the expected load
+            assert int(legacy.n_dropped) > 0
+            assert int(tight.n_dropped) < int(legacy.n_dropped)
+        else:
+            assert cap_tight < cap_legacy, "tight capacity must shrink buffers"
+
+
+def test_capacity_bucket_pow2_lattice():
+    assert routing.capacity_bucket(1) == 16          # floor
+    assert routing.capacity_bucket(16) == 16
+    assert routing.capacity_bucket(17) == 32
+    assert routing.capacity_bucket(129) == 256
+    assert routing.capacity_bucket(1000, limit=600) == 600   # clamp to batch
+    # lattice: any load maps to one of O(log n) capacities
+    caps = {routing.capacity_bucket(c) for c in range(1, 5000)}
+    assert len(caps) <= 10
+
+
+def test_overflow_reports_n_dropped_exactly():
+    """n_dropped must equal the sum of per-bin overflow, item for item."""
+    rng = np.random.default_rng(9)
+    dest = jnp.asarray(rng.zipf(1.1, size=2048) % 16, jnp.int32)
+    for cap in (4, 16, 64):
+        b = routing.bin_by_dest(dest, 16, cap)
+        counts = np.bincount(np.asarray(dest), minlength=16)
+        expect = int(np.maximum(counts - cap, 0).sum())
+        assert int(b.n_dropped) == expect, cap
+        assert int((~np.asarray(b.kept)).sum()) == expect
+
+
+def test_count_exchange_is_not_a_data_round():
+    """The capacity prologue must not touch the collective-round counter
+    (DESIGN.md §3/§8: it moves S counters, not payloads)."""
+    dest = _dests("uniform", 256, 8, seed=3)
+    routing.reset_round_count()
+    cap = routing.plan_capacity(dest, 8)
+    b = routing.bin_by_dest(dest, 8, cap)
+    assert routing.round_count() == 0
+    routing.dispatch(b, [jnp.arange(256, dtype=jnp.int32)], None)
+    assert routing.round_count() == 1
+
+
+def test_eager_dht_ops_use_tight_capacity_and_report_wire():
+    """The eager engine path picks the count-driven capacity (zero drops,
+    fill fraction at or below the pow-2 bound) and reports wire words."""
+    cfg = DHTConfig(n_shards=32, buckets_per_shard=4096)
+    st = dht_create(cfg)
+    rng = np.random.default_rng(4)
+    keys = jnp.asarray(rng.integers(0, 2**31, size=(4096, 20)), jnp.uint32)
+    vals = jnp.asarray(rng.integers(0, 2**31, size=(4096, 26)), jnp.uint32)
+    st, ws = dht_write(st, keys, vals)
+    assert int(ws["dropped"]) == 0
+    assert int(ws["inserted"]) == 4096
+    assert float(ws["fill_frac"]) <= 0.5 + 1e-6
+    assert int(ws["wire_words"]) > 0
+    st, out, found, rs = dht_read(st, keys)
+    assert bool(found.all())
+    assert float(rs["fill_frac"]) <= 0.5 + 1e-6
+    # legacy 4x heuristic on the same batch pads ~75%
+    legacy_fill = 1.0 - 4096 / (32 * routing.auto_capacity(4096, 32))
+    assert float(rs["fill_frac"]) < legacy_fill
+
+
+def test_wire_words_accounting_matches_buffer_geometry():
+    """wire_words == rows x (send lanes + reply lanes) for a read round:
+    keys(KW) + base + valid one way, vals(VW) + found + code back."""
+    cfg = DHTConfig(n_shards=4, buckets_per_shard=1024, capacity=64)
+    st = dht_create(cfg)
+    rng = np.random.default_rng(6)
+    keys = jnp.asarray(rng.integers(0, 2**31, size=(128, 20)), jnp.uint32)
+    st, _, _, rs = dht_read(st, keys)
+    rows = 4 * 64
+    send_lanes = 20 + 1 + 1
+    reply_lanes = 26 + 1 + 1
+    assert int(rs["wire_words"]) == rows * (send_lanes + reply_lanes)
