@@ -31,6 +31,7 @@ def main() -> None:
         bench_fig7_poet,
         bench_interp,
         bench_kernels,
+        bench_l1_locality,
         bench_resharding,
         bench_roofline,
         bench_table2_mismatch,
@@ -45,6 +46,7 @@ def main() -> None:
         "fig7": bench_fig7_poet,
         "valsize": bench_value_sizes,
         "kernels": bench_kernels,
+        "l1": bench_l1_locality,
         "interp": bench_interp,
         "reshard": bench_resharding,
         "roofline": bench_roofline,

@@ -25,6 +25,7 @@ from .dht import (  # noqa: F401
     W_UPDATE,
     dht_execute,
     dht_read,
+    dht_read_cached,
     dht_read_dual,
     dht_read_many,
     dht_read_many_dual,
@@ -34,6 +35,12 @@ from .dht import (  # noqa: F401
     mixed_ops,
     read_ops,
     write_ops,
+)
+from .l1cache import (  # noqa: F401
+    L1Config,
+    L1State,
+    l1_create,
+    l1_flush,
 )
 from .neighbors import (  # noqa: F401
     dedup_mask,
@@ -73,6 +80,7 @@ from .migrate import (  # noqa: F401
 from .surrogate import (  # noqa: F401
     SurrogateConfig,
     lookup,
+    lookup_cached,
     lookup_interpolate_or_compute,
     lookup_or_compute,
     lookup_or_interpolate,

@@ -31,9 +31,12 @@ from typing import Any
 
 import jax.numpy as jnp
 
-from . import routing
-from .layout import DHTConfig, DHTState
+from . import l1cache, routing
+from .hashing import hash64
+from .layout import DHTConfig, DHTState, shard_watermark
 from .op_engine import (
+    _flat_axis_index,
+    _owner_epoch,
     OP_MIGRATE,
     OP_READ,
     OP_WRITE,
@@ -63,18 +66,24 @@ def dht_write(
     valid: jnp.ndarray | None = None,
     *,
     axis_name: Any = None,
+    l1_meta: bool = False,
 ) -> tuple[DHTState, dict[str, jnp.ndarray]]:
     """DHT_write: store/update a batch of key-value pairs.
 
     local backend  : ``state`` holds all S shards, ``keys`` is the global batch.
     sharded backend: call inside shard_map; ``state`` is this device's shard
     (leading dim 1) and ``keys`` the device-local batch.
+
+    ``l1_meta=True`` piggybacks the locality-tier coherence watermarks on
+    the reply lanes (stats gain ``wmark_post``, DESIGN.md §9) — required
+    for every write issued while an L1 cache is attached, so the write is
+    what invalidates the cached lines it obsoletes.
     """
     if valid is None:
         valid = _ones(keys)
     state, _, _vals, _found, code, es = dht_execute(
         state, write_ops(keys, vals, valid), kinds=("write",),
-        axis_name=axis_name)
+        axis_name=axis_name, l1_meta=l1_meta)
     stats = {
         "inserted": jnp.sum(code == W_INSERT).astype(jnp.int32),
         "updated": jnp.sum(code == W_UPDATE).astype(jnp.int32),
@@ -87,6 +96,8 @@ def dht_write(
         "fill_frac": es["fill_frac"],
         "code": code,
     }
+    if l1_meta:
+        stats["wmark_post"] = es["wmark_post"]
     return state, stats
 
 
@@ -96,14 +107,18 @@ def dht_read(
     valid: jnp.ndarray | None = None,
     *,
     axis_name: Any = None,
+    l1_meta: bool = False,
 ) -> tuple[DHTState, jnp.ndarray, jnp.ndarray, dict[str, jnp.ndarray]]:
     """DHT_read: fetch a batch of values.  Returns (state', vals, found, stats);
     state' differs only in lock-free mode when mismatching buckets get
-    flagged INVALID."""
+    flagged INVALID.  ``l1_meta=True`` adds the locality-tier watermark
+    piggyback to the stats (``wmark_post``) so an uncached round issued
+    while an L1 is attached still refreshes the coherence table."""
     if valid is None:
         valid = _ones(keys)
     state, _, vals, found, _code, es = dht_execute(
-        state, read_ops(keys, valid), kinds=("read",), axis_name=axis_name)
+        state, read_ops(keys, valid), kinds=("read",), axis_name=axis_name,
+        l1_meta=l1_meta)
     stats = {
         "hits": jnp.sum(found).astype(jnp.int32),
         "misses": jnp.sum(valid & ~found).astype(jnp.int32),
@@ -114,7 +129,79 @@ def dht_read(
         "wire_words": es["wire_words"],
         "fill_frac": es["fill_frac"],
     }
+    if l1_meta:
+        stats["wmark_post"] = es["wmark_post"]
     return state, vals, found, stats
+
+
+def dht_read_cached(
+    state: DHTState,
+    l1: l1cache.L1State,
+    keys: jnp.ndarray,
+    valid: jnp.ndarray | None = None,
+    *,
+    axis_name: Any = None,
+) -> tuple[DHTState, l1cache.L1State, jnp.ndarray, jnp.ndarray,
+           dict[str, jnp.ndarray]]:
+    """DHT_read through the locality tier (DESIGN.md §9): coherent L1
+    hits are served from the per-device cache with ZERO collective
+    traffic; only the residue rides the one-round engine (which, on the
+    sharded backend, additionally elides self-owned requests from the
+    ``all_to_all``).  The merged result is bit-for-bit identical to
+    :func:`dht_read` whenever every table mutation since the lines were
+    filled went through engine rounds with the coherence piggyback —
+    the parity oracle ``tests/test_l1cache.py`` enforces it on mixed
+    read/write streams on both backends.
+
+    Returns ``(state', l1', vals, found, stats)``; ``stats`` matches
+    :func:`dht_read` plus ``l1_hits``.  Not for use mid-migration: run
+    :func:`dht_read_dual` between ``migration_begin``/``finish`` (the
+    epoch stamp keeps old-epoch lines from ever being served afterwards,
+    which is the "flush on epoch change" rule).
+    """
+    if valid is None:
+        valid = _ones(keys)
+    l1cfg = l1.cfg
+    hashes = hash64(keys)
+    set_idx, way_idx = l1cache.l1_slots(l1cfg, *hashes)
+    dest, epoch = _owner_epoch(state, hashes[0])
+    if axis_name is None:
+        # full table in hand: recompute every shard's watermark, so even
+        # out-of-band meta edits (tests, async host mutations) fence
+        known = shard_watermark(state.meta)
+    else:
+        # own shard recomputed, the rest from the piggybacked table
+        my = _flat_axis_index(axis_name)
+        known = l1.shard_wmark.at[my].set(shard_watermark(state.meta[0]))
+    flags = l1cache.serve_flags(l1, known, epoch)
+    hit, cval = l1cache.l1_probe(l1cfg, l1, keys, set_idx, flags)
+    hit = hit & valid
+
+    rvalid = valid & ~hit
+    state, _, rval, rfound, _code, es = dht_execute(
+        state, OpBatch(keys=keys, valid=rvalid), kinds=("read",),
+        axis_name=axis_name, hashes=hashes, placement=(dest, epoch),
+        l1_meta=True)
+    vals = jnp.where(hit[:, None], cval, rval)
+    found = hit | rfound
+
+    gen = es.pop("bucket_gen")
+    wpre, wpost = es.pop("wmark_pre"), es.pop("wmark_post")
+    l1 = l1cache.with_shard_wmarks(l1, wpost)
+    l1 = l1cache.l1_insert(l1cfg, l1, keys, rval, gen, dest, wpre[dest],
+                           epoch, set_idx, way_idx, mask=rfound)
+    stats = {
+        "hits": jnp.sum(found).astype(jnp.int32),
+        "misses": jnp.sum(valid & ~found).astype(jnp.int32),
+        "l1_hits": jnp.sum(hit).astype(jnp.int32),
+        "mismatches": es["mismatches"],
+        "dropped": es["dropped"],
+        "lock_tokens": es["lock_tokens"],
+        "epoch": es["epoch"],
+        "wire_words": es["wire_words"],
+        "fill_frac": es["fill_frac"],
+    }
+    return state, l1, vals, found, stats
 
 
 def dht_read_many(
@@ -123,6 +210,7 @@ def dht_read_many(
     valid: jnp.ndarray | None = None,
     *,
     axis_name: Any = None,
+    l1_meta: bool = False,
 ) -> tuple[DHTState, jnp.ndarray, jnp.ndarray, dict[str, jnp.ndarray]]:
     """Batched multi-key read: probe m candidate keys per query row in ONE
     routing round (the neighborhood-query hot path, DESIGN.md §6).
@@ -138,7 +226,8 @@ def dht_read_many(
     """
     n, m = keys.shape[0], keys.shape[1]
     flat, vflat = routing.flatten_fanout(keys, valid)
-    state, val, found, stats = dht_read(state, flat, vflat, axis_name=axis_name)
+    state, val, found, stats = dht_read(state, flat, vflat,
+                                        axis_name=axis_name, l1_meta=l1_meta)
     return (
         state,
         routing.unflatten_fanout(val, n, m),
@@ -194,6 +283,14 @@ def _dht_read_dual_seq(
     vals, found = routing.merge_dual_epoch(
         found_new, val_new, found_old, val_old
     )
+    # fill_frac is a fraction of each round's buffer: combine weighted by
+    # the rounds' wire words, not a flat mean — the second round usually
+    # carries only the residual misses, so its (large) padding fraction
+    # must not count as if it moved as many words as the first
+    w_new = s_new["wire_words"].astype(jnp.float32)
+    w_old = s_old["wire_words"].astype(jnp.float32)
+    total = jnp.maximum(w_new + w_old, 1.0)
+    fill = (s_new["fill_frac"] * w_new + s_old["fill_frac"] * w_old) / total
     stats = {
         "hits": (s_new["hits"] + s_old["hits"]).astype(jnp.int32),
         "misses": jnp.sum(valid & ~found).astype(jnp.int32),
@@ -202,7 +299,7 @@ def _dht_read_dual_seq(
         "lock_tokens": s_new["lock_tokens"] + s_old["lock_tokens"],
         "epoch": s_new["epoch"],
         "wire_words": s_new["wire_words"] + s_old["wire_words"],
-        "fill_frac": (s_new["fill_frac"] + s_old["fill_frac"]) * 0.5,
+        "fill_frac": fill,
         "hits_old_epoch": s_old["hits"],
     }
     return state, prev, vals, found, stats
@@ -277,6 +374,7 @@ __all__ = [
     "OpBatch",
     "dht_execute",
     "dht_read",
+    "dht_read_cached",
     "dht_read_dual",
     "dht_read_many",
     "dht_read_many_dual",

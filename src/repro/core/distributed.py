@@ -16,6 +16,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from . import dht as dht_ops
+from . import l1cache
 from .compat import shard_map
 from .layout import DHTConfig, DHTState, dht_create
 
@@ -56,14 +57,27 @@ def _state_shardings(mesh: Mesh, template: DHTState):
 
 @dataclasses.dataclass
 class ShardedDHT:
-    """Jitted sharded read/write closures bound to a mesh."""
+    """Jitted sharded read/write closures bound to a mesh.
+
+    With ``l1cfg`` set, every device fronts its traffic with the locality
+    tier (DESIGN.md §9): reads probe the per-device L1 before routing and
+    elide self-owned requests from the ``all_to_all``; every round —
+    reads AND writes — refreshes the per-shard coherence watermarks from
+    the reply-lane piggyback, which is what invalidates cached lines a
+    remote write obsoleted.  All table mutations must therefore go
+    through this object's closures while an L1 is attached."""
 
     mesh: Mesh
     cfg: DHTConfig
     state: DHTState
+    l1cfg: l1cache.L1Config | None = None
+    l1: l1cache.L1State | None = None
     # keyed closure cache: (op name, cfg, ring-presence[, extras]) -> jitted
     # shard_map closure — a fresh wrapper per call would retrace every time
     _fn_cache: dict = dataclasses.field(default_factory=dict, repr=False)
+    # valid-mask cache (satellite): one all-true device_put per batch shape
+    # instead of a fresh transfer on every read/write/read_many call
+    _ones_cache: dict = dataclasses.field(default_factory=dict, repr=False)
 
     def _cached_fn(self, name: str, maker, state: DHTState | None = None,
                    extra: tuple = ()):
@@ -81,14 +95,29 @@ class ShardedDHT:
         return fn
 
     @classmethod
-    def create(cls, mesh: Mesh, cfg: DHTConfig, ring=None) -> "ShardedDHT":
+    def create(cls, mesh: Mesh, cfg: DHTConfig, ring=None,
+               l1cfg: l1cache.L1Config | None = None) -> "ShardedDHT":
         n_dev = mesh.devices.size
         assert cfg.n_shards == n_dev, (
             f"one shard per device: n_shards={cfg.n_shards} != mesh size {n_dev}"
         )
         template = dht_create(cfg, ring)
         state = jax.device_put(template, _state_shardings(mesh, template))
-        return cls(mesh=mesh, cfg=cfg, state=state)
+        l1 = None
+        if l1cfg is not None:
+            if l1cfg.key_words != cfg.key_words or \
+                    l1cfg.val_words != cfg.val_words:
+                l1cfg = dataclasses.replace(
+                    l1cfg, key_words=cfg.key_words, val_words=cfg.val_words)
+            # one private L1 per device: leading device dim, sharded like
+            # the slabs so each device sees exactly its own cache
+            l1t = jax.tree.map(
+                lambda x: jnp.broadcast_to(x[None], (n_dev,) + x.shape),
+                l1cache.l1_create(l1cfg, cfg.n_shards))
+            spec = shard_spec(mesh)
+            l1 = jax.device_put(
+                l1t, jax.tree.map(lambda _: NamedSharding(mesh, spec), l1t))
+        return cls(mesh=mesh, cfg=cfg, state=state, l1cfg=l1cfg, l1=l1)
 
     # -- sharded ops ------------------------------------------------------
     def _specs(self, state: DHTState | None = None):
@@ -102,6 +131,10 @@ class ShardedDHT:
         return axes, state_spec, batch_spec
 
     def write_fn(self, state: DHTState | None = None):
+        assert self.l1 is None, (
+            "L1 attached: write through write() (write_refresh_fn) so the "
+            "coherence watermarks refresh — a raw write round would let "
+            "stale cached lines keep serving")
         axes, state_spec, batch_spec = self._specs(state)
 
         def fn(state, keys, vals, valid):
@@ -148,6 +181,12 @@ class ShardedDHT:
 
         The returned closure maps ``(state, keys, vals, valid) ->
         (state', vals, found, code, estats)``."""
+        assert self.l1 is None or "write" not in kinds, (
+            "L1 attached: a same-epoch write round without the watermark "
+            "refresh would let stale cached lines keep serving — use "
+            "write().  (Get-or-put rounds are safe: W_SKIP never "
+            "overwrites a present key, and epoch-bumping migrations flush "
+            "the cache via the epoch stamp.)")
         axes, state_spec, batch_spec = self._specs(state)
         do_write = ("write" in kinds) or ("migrate" in kinds)
 
@@ -191,30 +230,141 @@ class ShardedDHT:
             )
         )
 
-    def _ones(self, n: int):
-        return jax.device_put(
-            jnp.ones((n,), bool),
-            NamedSharding(self.mesh, P(mesh_axes(self.mesh))),
+    # -- locality tier (DESIGN.md §9) -------------------------------------
+    def _l1_spec(self):
+        sspec = shard_spec(self.mesh)
+        return jax.tree.map(lambda _: sspec, self.l1)
+
+    def read_cached_fn(self, state: DHTState | None = None):
+        """L1-fronted read: coherent hot keys are served device-locally,
+        self-owned residue skips the all_to_all (engine elision), and the
+        round's reply lanes refresh the coherence watermarks."""
+        axes, state_spec, batch_spec = self._specs(state)
+        l1_spec = self._l1_spec()
+
+        def fn(state, l1, keys, valid):
+            l1d = jax.tree.map(lambda x: x[0], l1)
+            state, l1d, vals, found, stats = dht_ops.dht_read_cached(
+                state, l1d, keys, valid, axis_name=axes)
+            l1 = jax.tree.map(lambda x: x[None], l1d)
+            return state, l1, vals, found, _psum_stats(stats, axes)
+
+        stats_spec = {k: P() for k in
+                      ("hits", "misses", "l1_hits", "mismatches", "dropped",
+                       "lock_tokens", "epoch", "wire_words", "fill_frac")}
+        return jax.jit(
+            shard_map(
+                fn, mesh=self.mesh,
+                in_specs=(state_spec, l1_spec, batch_spec, batch_spec),
+                out_specs=(state_spec, l1_spec, batch_spec, batch_spec,
+                           stats_spec),
+            )
         )
+
+    def write_refresh_fn(self, state: DHTState | None = None):
+        """Write round that also refreshes the L1 coherence table: the
+        piggybacked post-round watermarks are what invalidate every
+        cached line the write obsoleted — on this device and every other
+        one (all devices run the same round)."""
+        axes, state_spec, batch_spec = self._specs(state)
+        l1_spec = self._l1_spec()
+
+        def fn(state, l1, keys, vals, valid):
+            state, stats = dht_ops.dht_write(
+                state, keys, vals, valid, axis_name=axes, l1_meta=True)
+            l1d = jax.tree.map(lambda x: x[0], l1)
+            l1d = l1cache.with_shard_wmarks(l1d, stats.pop("wmark_post"))
+            l1 = jax.tree.map(lambda x: x[None], l1d)
+            return state, l1, _psum_stats(stats, axes)
+
+        stats_spec = {k: (batch_spec if k == "code" else P())
+                      for k in ("inserted", "updated", "evicted", "dropped",
+                                "rounds", "lock_tokens", "epoch",
+                                "wire_words", "fill_frac", "code")}
+        return jax.jit(
+            shard_map(
+                fn, mesh=self.mesh,
+                in_specs=(state_spec, l1_spec, batch_spec, batch_spec,
+                          batch_spec),
+                out_specs=(state_spec, l1_spec, stats_spec),
+            )
+        )
+
+    def read_many_refresh_fn(self, state: DHTState | None = None):
+        """Neighborhood read that refreshes the L1 coherence table (the
+        stencil fan-out itself is not L1-served, but its round may flag
+        INVALID buckets — a meta transition cached lines must observe)."""
+        axes, state_spec, batch_spec = self._specs(state)
+        l1_spec = self._l1_spec()
+
+        def fn(state, l1, keys, valid):
+            state, vals, found, stats = dht_ops.dht_read_many(
+                state, keys, valid, axis_name=axes, l1_meta=True)
+            l1d = jax.tree.map(lambda x: x[0], l1)
+            l1d = l1cache.with_shard_wmarks(l1d, stats.pop("wmark_post"))
+            l1 = jax.tree.map(lambda x: x[None], l1d)
+            return state, l1, vals, found, _psum_stats(stats, axes)
+
+        stats_spec = {k: P() for k in
+                      ("hits", "misses", "mismatches", "dropped",
+                       "lock_tokens", "epoch", "wire_words", "fill_frac")}
+        return jax.jit(
+            shard_map(
+                fn, mesh=self.mesh,
+                in_specs=(state_spec, l1_spec, batch_spec, batch_spec),
+                out_specs=(state_spec, l1_spec, batch_spec, batch_spec,
+                           stats_spec),
+            )
+        )
+
+    def _ones(self, shape):
+        """All-true valid mask, cached per batch shape (satellite: the
+        old per-call device_put showed up on every read/write)."""
+        shape = (shape,) if isinstance(shape, int) else tuple(shape)
+        mask = self._ones_cache.get(shape)
+        if mask is None:
+            mask = jax.device_put(
+                jnp.ones(shape, bool),
+                NamedSharding(self.mesh, P(mesh_axes(self.mesh))),
+            )
+            self._ones_cache[shape] = mask
+        return mask
 
     # convenience stateful wrappers (closures come from the keyed cache)
     def write(self, keys, vals, valid=None):
         valid = self._ones(keys.shape[0]) if valid is None else valid
+        if self.l1 is not None:
+            fn = self._cached_fn("write_refresh", self.write_refresh_fn,
+                                 extra=(self.l1cfg,))
+            self.state, self.l1, stats = fn(
+                self.state, self.l1, keys, vals, valid)
+            return stats
         fn = self._cached_fn("write", self.write_fn)
         self.state, stats = fn(self.state, keys, vals, valid)
         return stats
 
     def read(self, keys, valid=None):
         valid = self._ones(keys.shape[0]) if valid is None else valid
+        if self.l1 is not None:
+            fn = self._cached_fn("read_cached", self.read_cached_fn,
+                                 extra=(self.l1cfg,))
+            self.state, self.l1, vals, found, stats = fn(
+                self.state, self.l1, keys, valid)
+            return vals, found, stats
         fn = self._cached_fn("read", self.read_fn)
         self.state, vals, found, stats = fn(self.state, keys, valid)
         return vals, found, stats
 
     def read_many(self, keys, valid=None):
         if valid is None:
-            valid = jax.device_put(
-                jnp.ones(keys.shape[:2], bool),
-                NamedSharding(self.mesh, P(mesh_axes(self.mesh))))
+            valid = self._ones(keys.shape[:2])
+        if self.l1 is not None:
+            fn = self._cached_fn("read_many_refresh",
+                                 self.read_many_refresh_fn,
+                                 extra=(self.l1cfg,))
+            self.state, self.l1, vals, found, stats = fn(
+                self.state, self.l1, keys, valid)
+            return vals, found, stats
         fn = self._cached_fn("read_many", self.read_many_fn)
         self.state, vals, found, stats = fn(self.state, keys, valid)
         return vals, found, stats

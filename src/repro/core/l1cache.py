@@ -1,0 +1,247 @@
+"""Per-device L1 hot-key cache — the locality tier's front end (DESIGN.md §9).
+
+The paper's premise is that the surrogate pays off only if a lookup is
+much cheaper than the simulation; after PR 3 made the collective round
+singular and PR 4 made it zero-waste, the remaining cost of a ``dht_read``
+is the round itself.  Skewed traffic (POET grid cells re-querying
+near-identical chemistry, Zipf serving keys) re-reads the same keys, so a
+small per-device cache in front of the router converts the hot part of
+the stream from O(collective round) to O(local probe) — the "local fast
+path dominates" observation of Maier et al.'s concurrent-hash-table study,
+applied to the distributed tier.
+
+Layout: a set-associative array of lines, one line = ``(key, val, csum,
+gen)`` plus the coherence stamp ``(epoch, owner, wmark)``:
+
+- ``set``   = ``fold32(hash_hi, hash_lo) % n_sets`` — decorrelated from
+  both the owner shard (``hash_hi``) and the slab probe window
+  (``hash_lo`` alone), so one hot shard does not collapse onto one set.
+- ``way``   = a second hash slice; insertion is hash-partitioned (a key
+  always claims the same way of its set), which needs no LRU state and
+  vectorizes as one scatter.
+- ``csum``  is the lock-free key‖value checksum at fill time (the record
+  layout the table itself uses), carried for oracle/debug validation.
+- ``gen``   is the serving bucket's write generation (``meta >>
+  GEN_SHIFT``) at the snapshot the value was read — the fine-grained
+  stamp piggybacked per item on the reply lanes.
+
+Coherence is generation-based with ZERO extra rounds (DESIGN.md §9): a
+line is servable iff its epoch matches the table's membership epoch (a
+ring migration therefore flushes the whole cache implicitly) AND its
+``wmark`` stamp equals the current watermark of its owner shard
+(``layout.shard_watermark``: strictly increasing under in-protocol meta
+transitions).  Every engine round broadcasts all shards' watermarks on
+the existing reply lanes (``routing.collect`` block rows), and the local
+shard's watermark is recomputed directly from the slab, so a write to
+*any* bucket of a shard conservatively invalidates that shard's lines —
+exact for correctness, coarse for precision, free on the wire.  The jnp
+probe path here is the oracle the fused Pallas kernel
+(``kernels/l1_kernel.py``) is validated against bit for bit.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .hashing import checksum32, murmur32_words
+
+# Pallas L1-probe switch: None = auto (TPU only), True/False forces it
+# (mirrors routing.USE_PALLAS_ROUTE; tests flip it to drive the kernel
+# through the full cached-read path).
+USE_PALLAS_L1: bool | None = None
+
+_FOLD_SEED = 0x94D049BB
+
+
+def _pallas_l1_active() -> bool:
+    if USE_PALLAS_L1 is not None:
+        return USE_PALLAS_L1
+    return jax.default_backend() == "tpu"
+
+
+@dataclasses.dataclass(frozen=True)
+class L1Config:
+    """Static cache geometry (pytree aux data)."""
+
+    n_sets: int = 256
+    n_ways: int = 4
+    key_words: int = 20
+    val_words: int = 26
+
+    def __post_init__(self):
+        assert self.n_sets >= 1 and self.n_ways >= 1
+
+    @property
+    def n_lines(self) -> int:
+        return self.n_sets * self.n_ways
+
+    @property
+    def bytes(self) -> int:
+        # key + val + csum + gen + wmark (u32) + owner + epoch (i32) + live
+        return self.n_lines * (4 * (self.key_words + self.val_words + 5) + 1)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class L1State:
+    """The cache arrays plus the per-shard known-watermark table.
+
+    ``shard_wmark`` is this device's latest knowledge of every shard's
+    meta watermark, refreshed from the reply-lane piggyback of EVERY
+    round issued while the cache is attached (reads and writes alike —
+    a round that skips the refresh would let a line stamped at the same
+    value keep serving across a remote write)."""
+
+    cfg: L1Config
+    keys: jnp.ndarray          # (sets, ways, KW) uint32
+    vals: jnp.ndarray          # (sets, ways, VW) uint32
+    csum: jnp.ndarray          # (sets, ways) uint32
+    gen: jnp.ndarray           # (sets, ways) uint32 bucket generation stamp
+    owner: jnp.ndarray         # (sets, ways) int32 owner shard of the key
+    wmark: jnp.ndarray         # (sets, ways) uint32 owner watermark stamp
+    epoch: jnp.ndarray         # (sets, ways) int32 membership epoch stamp
+    live: jnp.ndarray          # (sets, ways) bool
+    shard_wmark: jnp.ndarray   # (n_shards,) uint32 latest known watermarks
+
+    def tree_flatten(self):
+        return ((self.keys, self.vals, self.csum, self.gen, self.owner,
+                 self.wmark, self.epoch, self.live, self.shard_wmark),
+                self.cfg)
+
+    @classmethod
+    def tree_unflatten(cls, cfg, children):
+        return cls(cfg, *children)
+
+
+def l1_create(cfg: L1Config, n_shards: int) -> L1State:
+    s, w = cfg.n_sets, cfg.n_ways
+    return L1State(
+        cfg=cfg,
+        keys=jnp.zeros((s, w, cfg.key_words), jnp.uint32),
+        vals=jnp.zeros((s, w, cfg.val_words), jnp.uint32),
+        csum=jnp.zeros((s, w), jnp.uint32),
+        gen=jnp.zeros((s, w), jnp.uint32),
+        owner=jnp.full((s, w), -1, jnp.int32),
+        wmark=jnp.zeros((s, w), jnp.uint32),
+        epoch=jnp.full((s, w), -1, jnp.int32),
+        live=jnp.zeros((s, w), bool),
+        shard_wmark=jnp.zeros((n_shards,), jnp.uint32),
+    )
+
+
+def l1_flush(l1: L1State) -> L1State:
+    """Drop every line (epoch changes do this implicitly via the stamp)."""
+    return dataclasses.replace(l1, live=jnp.zeros_like(l1.live))
+
+
+def with_shard_wmarks(l1: L1State, wmarks: jnp.ndarray) -> L1State:
+    """Refresh the known-watermark table from a round's reply piggyback.
+
+    The table width follows the round's shard count — a resize migration
+    legitimately changes it on the local backend (the sharded backend's
+    mesh, and therefore its table shape, is fixed)."""
+    return dataclasses.replace(
+        l1, shard_wmark=wmarks.astype(jnp.uint32).reshape(-1))
+
+
+def fold32(h_hi: jnp.ndarray, h_lo: jnp.ndarray) -> jnp.ndarray:
+    """Mix the 64-bit key hash into one uint32 decorrelated from both
+    lanes — the L1 set index derives from this, so it is independent of
+    the owner-shard choice (``h_hi``) and the probe-window base
+    (``h_lo``)."""
+    return murmur32_words(
+        jnp.stack([h_hi, h_lo], axis=-1).astype(jnp.uint32), _FOLD_SEED)
+
+
+def l1_slots(cfg: L1Config, h_hi, h_lo) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(set, way) a key maps to.  The way is fixed per key (hash-
+    partitioned associativity): inserts need no replacement state, and
+    two keys thrash only on a full (set, way) collision (~1/n_lines per
+    pair)."""
+    f = fold32(h_hi, h_lo)
+    set_idx = (f % jnp.uint32(cfg.n_sets)).astype(jnp.int32)
+    way_idx = ((f // jnp.uint32(cfg.n_sets)) % jnp.uint32(cfg.n_ways))
+    return set_idx, way_idx.astype(jnp.int32)
+
+
+def serve_flags(l1: L1State, known_wmark: jnp.ndarray, epoch) -> jnp.ndarray:
+    """(sets, ways) bool — which lines are coherent right now: live, of
+    the current membership epoch, and stamped with their owner's latest
+    known watermark.  Computed once per batch over the whole (small)
+    cache; the per-item probe then only key-compares."""
+    owner = jnp.clip(l1.owner, 0, known_wmark.shape[0] - 1)
+    return (l1.live
+            & (l1.epoch == jnp.asarray(epoch, jnp.int32))
+            & (l1.wmark == known_wmark[owner]))
+
+
+def l1_probe(cfg: L1Config, l1: L1State, keys: jnp.ndarray,
+             set_idx: jnp.ndarray, flags: jnp.ndarray):
+    """Vectorized pre-routing probe: (hit (n,), vals (n, VW)).
+
+    ``flags`` comes from :func:`serve_flags`.  Dispatches to the fused
+    Pallas kernel on TPU (``kernels/l1_kernel.py``), whose oracle
+    ``kernels/ref.ref_l1_probe`` is pinned to the jnp path below."""
+    if _pallas_l1_active():
+        from repro.kernels import ops as _kops
+        return _kops.l1_probe(l1.keys, l1.vals, flags, keys, set_idx)
+    wkeys = l1.keys[set_idx]                             # (n, ways, KW)
+    ok = (jnp.all(wkeys == keys[:, None, :], axis=-1)
+          & flags[set_idx])                              # (n, ways)
+    hit = jnp.any(ok, axis=-1)
+    way = jnp.argmax(ok, axis=-1)
+    val = jnp.take_along_axis(
+        l1.vals[set_idx], way[:, None, None], axis=1)[:, 0]
+    val = jnp.where(hit[:, None], val, jnp.uint32(0))
+    return hit, val
+
+
+def l1_insert(cfg: L1Config, l1: L1State, keys, vals, gen, owner,
+              wmark, epoch, set_idx, way_idx, mask) -> L1State:
+    """Fill lines for the masked items (remote reads that came back
+    ``found``) in one deterministic scatter: among batch duplicates
+    landing on one (set, way), the highest item index wins — the same
+    rule as the slab write pass."""
+    n = keys.shape[0]
+    lines = cfg.n_lines
+    flat = set_idx * cfg.n_ways + way_idx                 # (n,) line id
+    slot = jnp.where(mask, flat, lines)                   # sentinel = drop
+    iota = jnp.arange(n, dtype=jnp.int32)
+    prio = jnp.where(mask, iota, jnp.int32(-1))
+    winner = jnp.full((lines,), -1, jnp.int32).at[slot].max(prio, mode="drop")
+    wslot = jnp.where(mask & (winner[flat] == prio), flat, lines)
+
+    def put(arr, item):
+        a = arr.reshape((lines,) + arr.shape[2:])
+        a = a.at[wslot].set(item, mode="drop")
+        return a.reshape(arr.shape)
+
+    ep = jnp.broadcast_to(jnp.asarray(epoch, jnp.int32), (n,))
+    return dataclasses.replace(
+        l1,
+        keys=put(l1.keys, keys.astype(jnp.uint32)),
+        vals=put(l1.vals, vals.astype(jnp.uint32)),
+        csum=put(l1.csum, checksum32(keys, vals)),
+        gen=put(l1.gen, gen.astype(jnp.uint32)),
+        owner=put(l1.owner, owner.astype(jnp.int32)),
+        wmark=put(l1.wmark, wmark.astype(jnp.uint32)),
+        epoch=put(l1.epoch, ep),
+        live=put(l1.live, jnp.ones((n,), bool)),
+    )
+
+
+__all__ = [
+    "L1Config",
+    "L1State",
+    "USE_PALLAS_L1",
+    "fold32",
+    "l1_create",
+    "l1_flush",
+    "l1_insert",
+    "l1_probe",
+    "l1_slots",
+    "serve_flags",
+    "with_shard_wmarks",
+]

@@ -113,6 +113,23 @@ def _live_mask(meta: jnp.ndarray) -> jnp.ndarray:
     return ((meta & OCCUPIED) != 0) & ((meta & INVALID) == 0)
 
 
+def shard_watermark(meta: jnp.ndarray) -> jnp.ndarray:
+    """Coherence watermark of a shard slab: the uint32 sum of its meta
+    words, reduced over the bucket axis ((B,) -> scalar, (S, B) -> (S,)).
+
+    The ONE definition the locality tier fences on (DESIGN.md §9): every
+    in-protocol meta transition — a write bumping a bucket generation
+    (+(1 << GEN_SHIFT) and maybe +OCCUPIED), an INVALID flag (+2), an
+    INVALID reclaim (gen bump minus the flag) — strictly increases the
+    sum within a membership epoch, so two equal watermarks mean "no
+    bucket on this shard changed in between" (modulo a full uint32 wrap,
+    which needs ~2^24 writes landing between two probes of one cached
+    line; epoch changes reset the comparison entirely because L1 lines
+    are epoch-stamped).  Cross-epoch transitions (migration retirement
+    zeroes meta) may decrease it; the L1 never compares across epochs."""
+    return jnp.sum(meta.astype(jnp.uint32), axis=-1, dtype=jnp.uint32)
+
+
 @partial(jax.jit, static_argnames=("cfg",))
 def occupancy(state: DHTState, cfg: DHTConfig | None = None) -> jnp.ndarray:
     """Fraction of occupied (and valid) buckets, per shard."""

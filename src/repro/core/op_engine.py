@@ -55,6 +55,7 @@ from .layout import (
     OCCUPIED,
     DHTConfig,
     DHTState,
+    shard_watermark,
 )
 
 # op tags — the request-record discriminator
@@ -365,9 +366,17 @@ def _shard_apply(cfg: DHTConfig, prev_cfg: DHTConfig | None,
     checks) observe the slab as of round start; writes apply after, under
     the mode's schedule (``_shard_write``).  Dual-epoch requests probe
     ``slab_prev`` when their epoch-select lane says so; writes only ever
-    target the current-epoch slab."""
+    target the current-epoch slab.
+
+    Besides the per-item results, the handler reports the locality-tier
+    coherence metadata (DESIGN.md §9): the snapshot generation of each
+    item's serving bucket (``gen``, garbage where nothing matched — L1
+    fills mask on ``found``) and this shard's meta watermark before
+    (``wpre``) and after (``wpost``) the round's mutations.  Both ride
+    the existing reply lanes when the caller asks for them."""
     do_probe = ("read" in kinds) or ("migrate" in kinds)
     do_write = ("write" in kinds) or ("migrate" in kinds)
+    wpre = shard_watermark(slab["meta"])
 
     if op is None:
         assert len(kinds) == 1, "untagged batches must be uniform-kind"
@@ -384,6 +393,7 @@ def _shard_apply(cfg: DHTConfig, prev_cfg: DHTConfig | None,
     vw = slab["vals"].shape[-1]
     val = jnp.zeros((c, vw), jnp.uint32)
     found = jnp.zeros((c,), bool)
+    gen = jnp.zeros((c,), jnp.uint32)
     n_mm = jnp.int32(0)
     tok = jnp.int32(0)
 
@@ -401,6 +411,8 @@ def _shard_apply(cfg: DHTConfig, prev_cfg: DHTConfig | None,
             win = {k: _sel(win[k], win_prev[k]) for k in win}
         has, sel, pval, stored_csum = _probe_window(win, keys)
         slot = base + sel
+        gen = (jnp.take_along_axis(win["meta"], sel[:, None], axis=1)[:, 0]
+               >> jnp.uint32(GEN_SHIFT))
 
         if cfg.mode == MODE_LOCKFREE:
             if slab_prev is None:
@@ -436,7 +448,9 @@ def _shard_apply(cfg: DHTConfig, prev_cfg: DHTConfig | None,
             jnp.where(m_migrate & found, jnp.int32(W_SKIP), jnp.int32(0)),
         )
 
-    return slab, slab_prev, val, found, code, n_mm, rounds, tok
+    wpost = shard_watermark(slab["meta"])
+    return (slab, slab_prev, val, found, code, n_mm, rounds, tok,
+            gen, wpre, wpost)
 
 
 # ---------------------------------------------------------------------------
@@ -452,13 +466,35 @@ def _owner_epoch(state: DHTState, h_hi):
     return ring_owner(h_hi, r.positions, r.owners, r.n_live), r.epoch
 
 
+def _flat_axis_index(axis_name) -> jnp.ndarray:
+    """This device's flattened shard id under (possibly multi-axis)
+    shard_map — row-major over the axis tuple, matching how
+    ``distributed.shard_spec`` flattens the mesh."""
+    names = axis_name if isinstance(axis_name, (tuple, list)) else (axis_name,)
+    idx = jnp.int32(0)
+    for name in names:
+        idx = idx * jax.lax.psum(1, name) + jax.lax.axis_index(name)
+    return idx
+
+
 def _route_ops(state: DHTState, prev: DHTState | None, ops: OpBatch,
-               capacity: int | None):
+               capacity: int | None, hashes=None, bin_valid=None,
+               placement=None):
     """One binning for the whole batch: each request routed to its owner
-    under the epoch its ``esel`` lane names."""
+    under the epoch its ``esel`` lane names.
+
+    ``hashes`` takes a precomputed ``hash64(ops.keys)`` pair so a caller
+    that already hashed for the L1 set index doesn't pay the murmur chain
+    twice; ``placement`` likewise takes a precomputed ``(dest, epoch)``
+    so the ring-owner searchsorted is not repeated.  ``bin_valid`` masks
+    items out of the binning entirely (self-elided or otherwise locally
+    served traffic): they take no bin slot and do not inflate the
+    count-driven capacity.  Returns ``(binned, base, dest,
+    used_prologue)``."""
     cfg = state.cfg
-    h_hi, h_lo = hash64(ops.keys)
-    dest, epoch = _owner_epoch(state, h_hi)
+    h_hi, h_lo = hash64(ops.keys) if hashes is None else hashes
+    dest, epoch = (_owner_epoch(state, h_hi) if placement is None
+                   else placement)
     base = base_bucket(h_lo, cfg.buckets_per_shard, cfg.n_probe)
     if prev is not None:
         dest_prev, _ = _owner_epoch(prev, h_hi)
@@ -469,6 +505,7 @@ def _route_ops(state: DHTState, prev: DHTState | None, ops: OpBatch,
         base = jnp.where(in_prev, base_prev, base)
     n = ops.keys.shape[0]
     cap = capacity or cfg.capacity
+    used_prologue = False
     if not cap:
         if isinstance(dest, jax.core.Tracer):
             # traced: buffer shapes must be fixed before the trace, so the
@@ -476,10 +513,16 @@ def _route_ops(state: DHTState, prev: DHTState | None, ops: OpBatch,
             cap = routing.auto_capacity(n, cfg.n_shards)
         else:
             # eager: count-exchange prologue — tight pow-2-bucketed
-            # capacity from the actual max bin load (zero drops)
-            cap = routing.plan_capacity(dest, cfg.n_shards)
-    binned = routing.bin_by_dest(dest, cfg.n_shards, cap, epoch=epoch)
-    return binned, base
+            # capacity from the actual max bin load (zero drops).  Items
+            # the round will not route (bin_valid False) are excluded.
+            vv = bin_valid
+            if vv is not None and isinstance(vv, jax.core.Tracer):
+                vv = None
+            cap = routing.plan_capacity(dest, cfg.n_shards, valid=vv)
+            used_prologue = True
+    binned = routing.bin_by_dest(dest, cfg.n_shards, cap, epoch=epoch,
+                                 valid=bin_valid)
+    return binned, base, dest, used_prologue
 
 
 def _slab_of(state: DHTState):
@@ -507,6 +550,10 @@ def dht_execute(
     prev: DHTState | None = None,
     axis_name: Any = None,
     capacity: int | None = None,
+    hashes: tuple[jnp.ndarray, jnp.ndarray] | None = None,
+    placement: tuple[jnp.ndarray, jnp.ndarray] | None = None,
+    l1_meta: bool = False,
+    elide_self: bool | None = None,
 ) -> tuple[DHTState, DHTState | None, jnp.ndarray, jnp.ndarray,
            jnp.ndarray, dict[str, jnp.ndarray]]:
     """Execute an op-tagged request batch in ONE collective round.
@@ -516,6 +563,26 @@ def dht_execute(
     uniform read batch costs exactly what the dedicated read round used
     to.  ``prev`` enables dual-epoch probing (``ops.esel`` required);
     ``capacity`` overrides the routing capacity for this call.
+
+    Locality tier (DESIGN.md §9):
+
+    - ``hashes`` / ``placement`` — precomputed ``hash64(ops.keys)`` and
+      ``(dest, epoch)``, so the L1 front end and the router share one
+      hash chain and one ring-owner lookup (``placement`` requires
+      ``prev is None`` — dual-epoch routing derives its own mix).
+    - ``l1_meta`` — piggyback the coherence metadata on the reply lanes:
+      ``estats`` gains ``bucket_gen`` (per item, the serving bucket's
+      snapshot generation), ``wmark_pre``/``wmark_post`` ((n_shards,)
+      per-shard meta watermarks before/after this round's mutations).
+      Costs 3 reply lanes, zero extra rounds.
+    - ``elide_self`` — on the sharded backend, requests owned by the
+      local shard skip the ``all_to_all`` entirely: they are masked out
+      of the binning (taking no bin slot) and probed against the local
+      slab as extra rows of the same ``_shard_apply`` call, so the merged
+      result is bit-for-bit the cacheless one.  Default (``None``): on
+      for uniform read rounds under shard_map, off otherwise (write
+      rounds keep full routing so the cross-device last-writer-wins
+      priority — buffer row order — is unchanged).
 
     Returns ``(state', prev', vals, found, code, estats)``:
 
@@ -543,7 +610,26 @@ def dht_execute(
             "single-round dual-epoch probe needs compatible geometry; "
             "use the sequential dht_read_dual fallback")
 
-    binned, base = _route_ops(state, prev, ops, capacity)
+    assert placement is None or prev is None, (
+        "precomputed placement is single-epoch only")
+    elidable = (axis_name is not None and kinds == ("read",)
+                and prev is None and ops.op is None)
+    elide = elidable if elide_self is None else bool(elide_self)
+    assert not elide or elidable, (
+        "self-traffic elision needs a sharded uniform read round")
+    if elide:
+        hashes = hash64(ops.keys) if hashes is None else hashes
+        if placement is None:
+            placement = _owner_epoch(state, hashes[0])
+        my = _flat_axis_index(axis_name)
+        is_self = ops.valid & (placement[0] == my)
+        bin_valid = ops.valid & ~is_self
+    else:
+        is_self = None
+        bin_valid = ops.valid
+
+    binned, base, _dest, used_prologue = _route_ops(
+        state, prev, ops, capacity, hashes, bin_valid, placement)
     payload_valid = (ops.valid & binned.kept).astype(jnp.int32)
     payloads = [base, ops.keys]
     if do_write:
@@ -563,6 +649,19 @@ def dht_execute(
         e = next(it) if prev is not None else None
         m = next(it)
         return b, k, v, o, e, m
+
+    def _replies(val, found, code, gen, wpre, wpost):
+        out = [val, found.astype(jnp.int32), code]
+        if l1_meta:
+            shape = gen.shape  # (S, cap) local / (rows,) sharded
+            out += [gen.astype(jnp.uint32),
+                    jnp.broadcast_to(
+                        wpre.reshape(wpre.shape + (1,) * (gen.ndim - wpre.ndim)),
+                        shape).astype(jnp.uint32),
+                    jnp.broadcast_to(
+                        wpost.reshape(wpost.shape + (1,) * (gen.ndim - wpost.ndim)),
+                        shape).astype(jnp.uint32)]
+        return out
 
     prev_cfg = None if prev is None else prev.cfg
     if axis_name is None:
@@ -585,32 +684,64 @@ def dht_execute(
                                     m.astype(bool), None, kinds)
 
             out = jax.vmap(handler)(slab, *inc)
-        slab, pslab, val, found, code, n_mm, rounds, tok = out
+        (slab, pslab, val, found, code, n_mm, rounds, tok,
+         gen, wpre, wpost) = out
         n_mm, tok = jnp.sum(n_mm), jnp.sum(tok)
         rounds = jnp.max(rounds)
-        val_b, found_b, code_b = routing.collect(
-            binned, [val, found.astype(jnp.int32), code], None)
+        coll = routing.collect(
+            binned, _replies(val, found, code, gen, wpre, wpost), None,
+            block_rows=l1_meta)
     else:
         slab = jax.tree.map(lambda x: x[0], _slab_of(state))
         pslab = (None if prev is None
                  else jax.tree.map(lambda x: x[0], _slab_of(prev)))
         b, k, v, o, e, m = _unpack(inc)
-        slab, pslab, val, found, code, n_mm, rounds, tok = _shard_apply(
+        if elide:
+            # self-owned requests ride the SAME _shard_apply call as extra
+            # rows after the incoming buffer — one pass, identical probe
+            # semantics, no collective
+            b = jnp.concatenate([b, base])
+            k = jnp.concatenate([k, ops.keys])
+            m = jnp.concatenate([m, is_self.astype(jnp.int32)])
+        (slab, pslab, val, found, code, n_mm, rounds, tok,
+         gen, wpre, wpost) = _shard_apply(
             cfg, prev_cfg, slab, pslab, b, k, v, o, e,
             m.astype(bool), axis_name, kinds)
+        buf_rows = binned.n_dest * binned.capacity
+        if elide:
+            val, val_l = val[:buf_rows], val[buf_rows:]
+            found, found_l = found[:buf_rows], found[buf_rows:]
+            code, code_l = code[:buf_rows], code[buf_rows:]
+            gen, gen_l = gen[:buf_rows], gen[buf_rows:]
         slab = jax.tree.map(lambda x: x[None], slab)
         if pslab is not None:
             pslab = jax.tree.map(lambda x: x[None], pslab)
-        val_b, found_b, code_b = routing.collect(
-            binned, [val, found.astype(jnp.int32), code], axis_name)
+        coll = routing.collect(
+            binned, _replies(val, found, code, gen, wpre, wpost), axis_name,
+            block_rows=l1_meta)
 
+    items, blocks = coll if l1_meta else (coll, None)
+    val_b, found_b, code_b = items[0], items[1], items[2]
     found_out = (found_b > 0) & ops.valid & binned.kept
-    val_out = jnp.where(found_out[:, None], val_b, jnp.uint32(0))
     code_out = jnp.where(ops.valid & binned.kept, code_b, W_DROPPED)
+    gen_out = items[3] if l1_meta else None
+    if elide:
+        found_out = jnp.where(is_self, found_l, found_out)
+        val_b = jnp.where(is_self[:, None], val_l, val_b)
+        code_out = jnp.where(is_self, code_l, code_out)
+        if l1_meta:
+            gen_out = jnp.where(is_self, gen_l, gen_out)
+    val_out = jnp.where(found_out[:, None], val_b, jnp.uint32(0))
     # wire accounting: both legs' buffer words + the padding fraction
-    # (reply leg lanes: value words + found + code)
+    # (reply leg lanes: value words + found + code [+ 3 coherence lanes]),
+    # plus the count-exchange prologue's histogram words (S counters each
+    # way) when this round was sized by it; the elided self block (pure
+    # padding, never crosses the fabric) is dropped from both legs
     wire = routing.wire_stats(
-        binned, routing.lane_width(payloads), cfg.val_words + 2)
+        binned, routing.lane_width(payloads),
+        cfg.val_words + 2 + (3 if l1_meta else 0),
+        prologue_words=2 * cfg.n_shards if used_prologue else 0,
+        n_self_rows=binned.capacity if elide else 0)
     estats = {
         "mismatches": n_mm.astype(jnp.int32),
         "rounds": rounds.astype(jnp.int32),
@@ -620,6 +751,10 @@ def dht_execute(
         "wire_words": wire["wire_words"],
         "fill_frac": wire["fill_frac"],
     }
+    if l1_meta:
+        estats["bucket_gen"] = gen_out.astype(jnp.uint32)
+        estats["wmark_pre"] = blocks[4].astype(jnp.uint32)
+        estats["wmark_post"] = blocks[5].astype(jnp.uint32)
     state_out = _state_from(state, slab)
     if prev is None:
         prev_out = None

@@ -153,39 +153,51 @@ def stable_rank_by_group(group: jnp.ndarray, valid=None,
 
 
 def bin_by_dest(
-    dest: jnp.ndarray, n_dest: int, capacity: int, epoch=None
+    dest: jnp.ndarray, n_dest: int, capacity: int, epoch=None, valid=None
 ) -> Binned:
-    """Compute within-bin positions with a stable order (item index)."""
-    pos = stable_rank_by_group(dest, n_groups=n_dest)
-    kept = pos < capacity
+    """Compute within-bin positions with a stable order (item index).
+
+    ``valid`` (optional) excludes items from binning entirely: they take
+    no bin slot, count toward neither capacity nor ``n_dropped``, and
+    come back ``kept=False`` — the mechanism behind self-traffic elision
+    and L1-hit elision (DESIGN.md §9): elided items are served locally,
+    so the wire buffers size to the *remaining* traffic only."""
+    pos = stable_rank_by_group(dest, valid, n_groups=n_dest)
+    in_cap = pos < capacity
+    kept = in_cap if valid is None else valid & in_cap
+    dropped = ~kept if valid is None else valid & ~in_cap
     return Binned(
         pos=pos,
         kept=kept,
         dest=dest.astype(jnp.int32),
         capacity=capacity,
         n_dest=n_dest,
-        n_dropped=jnp.sum(~kept).astype(jnp.int32),
+        n_dropped=jnp.sum(dropped).astype(jnp.int32),
         epoch=jnp.int32(0) if epoch is None else jnp.asarray(epoch, jnp.int32),
     )
 
 
 def bin_by_dest_onehot(
-    dest: jnp.ndarray, n_dest: int, capacity: int, epoch=None
+    dest: jnp.ndarray, n_dest: int, capacity: int, epoch=None, valid=None
 ) -> Binned:
     """Legacy O(n × n_dest) one-hot/cumsum binning — kept as the parity
     oracle (the sort path must match it bit for bit) and the benchmark
     baseline (``benchmarks/bench_kernels.py`` routing microbench)."""
     onehot = (dest[:, None] == jnp.arange(n_dest, dtype=dest.dtype)[None, :])
+    if valid is not None:
+        onehot = onehot & valid[:, None]
     pos = (jnp.cumsum(onehot.astype(jnp.int32), axis=0) - 1)
     pos = jnp.sum(pos * onehot, axis=1)
-    kept = pos < capacity
+    in_cap = pos < capacity
+    kept = in_cap if valid is None else valid & in_cap
+    dropped = ~kept if valid is None else valid & ~in_cap
     return Binned(
         pos=pos,
         kept=kept,
         dest=dest.astype(jnp.int32),
         capacity=capacity,
         n_dest=n_dest,
-        n_dropped=jnp.sum(~kept).astype(jnp.int32),
+        n_dropped=jnp.sum(dropped).astype(jnp.int32),
         epoch=jnp.int32(0) if epoch is None else jnp.asarray(epoch, jnp.int32),
     )
 
@@ -208,7 +220,7 @@ def capacity_bucket(max_load: int, floor: int = 16,
 
 
 def plan_capacity(dest, n_dest: int, *, n_src: int = 1,
-                  floor: int = 16) -> int:
+                  floor: int = 16, valid=None) -> int:
     """Count-exchange prologue: per-destination histogram → global max bin
     load → power-of-two-bucketed capacity (host-side, shape-static).
 
@@ -218,10 +230,18 @@ def plan_capacity(dest, n_dest: int, *, n_src: int = 1,
     backend, where the returned value is what the tiny all_to_all of
     per-(src, dest) counts would agree on (max over all pairs).  This
     moves S counters, not payloads, and is deliberately NOT counted as a
-    data round (DESIGN.md §3/§8).  Capacity ≥ max load ⇒ zero drops."""
+    data round (DESIGN.md §3/§8).  Capacity ≥ max load ⇒ zero drops.
+
+    ``valid`` (optional, same layout as ``dest``) excludes items from the
+    histogram — elided traffic (L1 hits, self-owned requests, masked
+    rows) takes no bin slot, so it must not inflate the capacity either
+    (DESIGN.md §9: this is where the locality tier's wire saving lands)."""
     d = np.asarray(dest).reshape(n_src, -1)
+    v = None if valid is None else np.asarray(valid).reshape(n_src, -1)
     max_load = 1
-    for row in d:
+    for i, row in enumerate(d):
+        if v is not None:
+            row = row[v[i]]
         counts = np.bincount(row.astype(np.int64), minlength=n_dest)
         max_load = max(max_load, int(counts.max(initial=1)))
     return capacity_bucket(max_load, floor=floor, limit=d.shape[1])
@@ -388,12 +408,22 @@ def collect(
     replies: Sequence[jnp.ndarray],
     axis_name: str | tuple[str, ...] | None,
     fills: Sequence = (0,),
+    block_rows: bool = False,
 ) -> list[jnp.ndarray]:
     """Inverse of :func:`dispatch`: return replies to the original items.
 
     Same fused transport: one lane matrix, one ``all_to_all``, one
     gather-from-bins pass; items that overflowed capacity receive their
-    payload's ``fills`` entry (cast through the reply dtype)."""
+    payload's ``fills`` entry (cast through the reply dtype).
+
+    ``block_rows=True`` additionally returns, per payload, row 0 of each
+    source shard's block of the post-exchange buffer — an (n_dest, *tail)
+    array.  The reply buffer is dense, so every shard contributes a block
+    whether or not this device sent it live items; a handler that writes
+    a shard-uniform value (e.g. its slab watermark, DESIGN.md §9) into a
+    reply lane for ALL its buffer rows therefore broadcasts one word per
+    shard to every device with zero extra collectives — the L1 coherence
+    piggyback rides here.  Returns ``(items, blocks)`` in that case."""
     tail_from = 2 if axis_name is None else 1
     mat, specs, fill_row = _encode(replies, tail_from, fills)
     rows, width = b.n_dest * b.capacity, mat.shape[1]
@@ -403,20 +433,34 @@ def collect(
             axis_name, split_axis=0, concat_axis=0, tiled=False,
         ).reshape(rows, width)
     out = _gather_from_bins(b, mat, fill_row)
-    return _decode(out, specs)
+    items = _decode(out, specs)
+    if not block_rows:
+        return items
+    blocks = _decode(mat[:: b.capacity], specs)
+    return items, blocks
 
 
-def wire_stats(b: Binned, send_lanes: int, reply_lanes: int) -> dict:
+def wire_stats(b: Binned, send_lanes: int, reply_lanes: int, *,
+               prologue_words: int = 0, n_self_rows: int = 0) -> dict:
     """Per-round wire accounting: total dispatched buffer words (both
     legs) and the fraction of buffer rows that are padding.  With
     count-driven capacity the fill fraction is bounded by the pow-2
     bucket (< 0.5 + skew); the legacy 4× heuristic pads ~75% under
-    uniform keys."""
-    rows = b.n_dest * b.capacity
+    uniform keys.
+
+    ``prologue_words`` counts the count-exchange capacity histogram (S
+    counters each way when the round was sized by :func:`plan_capacity`)
+    so the invariant "all words on the wire are accounted" holds even
+    for the metadata prologue — it is still NOT a data round (§3/§8).
+    ``n_self_rows`` subtracts buffer rows that never cross the fabric:
+    with self-traffic elision the local shard's block carries only
+    padding, so both legs drop ``capacity`` rows each (DESIGN.md §9)."""
+    rows = b.n_dest * b.capacity - n_self_rows
     kept = jnp.sum(b.kept).astype(jnp.float32)
     return {
-        "wire_words": jnp.int32(rows * (send_lanes + reply_lanes)),
-        "fill_frac": jnp.float32(1.0) - kept / jnp.float32(rows),
+        "wire_words": jnp.int32(rows * (send_lanes + reply_lanes)
+                                + prologue_words),
+        "fill_frac": jnp.float32(1.0) - kept / jnp.float32(max(rows, 1)),
     }
 
 

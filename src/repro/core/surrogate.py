@@ -85,6 +85,23 @@ def lookup(cfg: SurrogateConfig, state: DHTState, inputs: jnp.ndarray, *,
     return state, outputs, found, stats
 
 
+def lookup_cached(cfg: SurrogateConfig, state: DHTState, l1, inputs, *,
+                  axis_name=None):
+    """:func:`lookup` through the locality tier (DESIGN.md §9): POET's
+    grid cells re-query near-identical chemistry states, so the rounded
+    keys repeat heavily and the per-device L1 serves the hot ones with
+    zero collective traffic.  Returns ``(state', l1', outputs, found,
+    stats)`` — bit-identical outputs to :func:`lookup` under the L1
+    coherence contract.  Mid-migration callers keep using
+    ``lookup(..., prev=...)``; the epoch stamp flushes the L1 across the
+    membership change."""
+    keys = make_keys(cfg, inputs)
+    state, l1, val_words, found, stats = dht_ops.dht_read_cached(
+        state, l1, keys, axis_name=axis_name)
+    outputs = unpack_floats(val_words, cfg.n_outputs)
+    return state, l1, outputs, found, stats
+
+
 def store(cfg: SurrogateConfig, state: DHTState, inputs: jnp.ndarray,
           outputs: jnp.ndarray, valid=None, *, axis_name=None):
     keys = make_keys(cfg, inputs)

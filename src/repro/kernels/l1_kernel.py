@@ -1,0 +1,97 @@
+"""Pallas TPU kernel: fused L1 hot-key probe (the locality-tier front end).
+
+The pre-routing filter of ``core/l1cache.l1_probe`` (DESIGN.md §9): for
+each query, compare the key against the ways of its L1 set and select the
+value of the first coherent match.  The coherence decision itself (live ∧
+epoch ∧ watermark, ``l1cache.serve_flags``) is a tiny whole-cache vector
+op computed once per batch *outside* the kernel; the kernel fuses the
+expensive per-item part — the multi-word key compare across ways and the
+value select — into one tile pass so the filter stays off the hot path's
+critical time.
+
+Same TPU idiom as ``probe_kernel``: the per-query set indices are
+scalar-prefetched to SMEM and drive the BlockSpec index maps
+(``PrefetchScalarGridSpec``), the grid is (query, way) with the output
+block revisited across the inner way loop accumulating first-match-wins
+state.  Validated bit-for-bit against ``kernels/ref.ref_l1_probe``, which
+is pinned to the production jnp path in ``core/l1cache.py``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _l1_kernel(set_ref,    # scalar prefetch: (n,) int32 set index per query
+               qkeys_ref,  # (1, KW) current query key
+               lkeys_ref,  # (1, KW) candidate line key
+               lvals_ref,  # (1, VW) candidate line value
+               flags_ref,  # (1, 1) candidate coherence flag
+               val_out,    # (1, VW) result value
+               hit_out):   # (1, 1) result flag
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        val_out[...] = jnp.zeros_like(val_out)
+        hit_out[...] = jnp.zeros_like(hit_out)
+
+    keys_eq = jnp.all(lkeys_ref[...] == qkeys_ref[...])
+    already = hit_out[0, 0] > 0
+    hit = keys_eq & (flags_ref[0, 0] != 0) & jnp.logical_not(already)
+
+    @pl.when(hit)
+    def _store():
+        val_out[...] = lvals_ref[...]
+        hit_out[0, 0] = jnp.int32(1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def l1_probe_pallas(
+    l1_keys: jnp.ndarray,   # (sets, ways, KW) uint32
+    l1_vals: jnp.ndarray,   # (sets, ways, VW) uint32
+    flags: jnp.ndarray,     # (sets, ways) bool/int coherence flags
+    qkeys: jnp.ndarray,     # (n, KW) uint32
+    set_idx: jnp.ndarray,   # (n,) int32
+    *,
+    interpret: bool = True,
+):
+    """Returns (hit (n,) bool, vals (n, VW) uint32)."""
+    sets, ways, kw = l1_keys.shape
+    vw = l1_vals.shape[-1]
+    n = qkeys.shape[0]
+    lkeys = l1_keys.reshape(sets * ways, kw)
+    lvals = l1_vals.reshape(sets * ways, vw)
+    lflags = flags.astype(jnp.int32).reshape(sets * ways, 1)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n, ways),
+        in_specs=[
+            pl.BlockSpec((1, kw), lambda i, j, set_ref: (i, 0)),
+            pl.BlockSpec((1, kw),
+                         lambda i, j, set_ref: (set_ref[i] * ways + j, 0)),
+            pl.BlockSpec((1, vw),
+                         lambda i, j, set_ref: (set_ref[i] * ways + j, 0)),
+            pl.BlockSpec((1, 1),
+                         lambda i, j, set_ref: (set_ref[i] * ways + j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, vw), lambda i, j, set_ref: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, j, set_ref: (i, 0)),
+        ],
+    )
+    val, hit = pl.pallas_call(
+        _l1_kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((n, vw), jnp.uint32),
+            jax.ShapeDtypeStruct((n, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(set_idx, qkeys, lkeys, lvals, lflags)
+    return hit[:, 0] > 0, val

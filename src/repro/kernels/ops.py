@@ -52,6 +52,16 @@ def shard_apply(slab_keys, slab_vals, slab_meta, slab_csum, qkeys, base,
     )
 
 
+def l1_probe(l1_keys, l1_vals, flags, qkeys, set_idx,
+             *, interpret: bool | None = None):
+    from .l1_kernel import l1_probe_pallas
+
+    return l1_probe_pallas(
+        l1_keys, l1_vals, flags, qkeys, set_idx,
+        interpret=_default_interpret() if interpret is None else interpret,
+    )
+
+
 def route_pack(mat, inv, fill_row, *, interpret: bool | None = None):
     from .route_kernel import route_pack_pallas
 

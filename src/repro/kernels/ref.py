@@ -152,6 +152,29 @@ def ref_murmur32(words: jnp.ndarray, seed: int) -> jnp.ndarray:
     return murmur32_words(words, seed)
 
 
+def ref_l1_probe(
+    l1_keys: jnp.ndarray,   # (sets, ways, KW) uint32
+    l1_vals: jnp.ndarray,   # (sets, ways, VW) uint32
+    flags: jnp.ndarray,     # (sets, ways) bool coherence flags
+    qkeys: jnp.ndarray,     # (n, KW) uint32
+    set_idx: jnp.ndarray,   # (n,) int32
+):
+    """Oracle for the fused L1-probe kernel: first coherent key-equal way
+    of each query's set wins — exactly the production jnp path of
+    ``core/l1cache.l1_probe`` (the coherence ``flags`` come from
+    ``l1cache.serve_flags`` and are an input, not recomputed here).
+
+    Returns (hit (n,) bool, vals (n, VW) uint32)."""
+    wkeys = l1_keys[set_idx]                                 # (n, ways, KW)
+    ok = (jnp.all(wkeys == qkeys[:, None, :], axis=-1)
+          & (flags[set_idx] != 0))
+    hit = jnp.any(ok, axis=-1)
+    way = jnp.argmax(ok, axis=-1)
+    val = jnp.take_along_axis(
+        l1_vals[set_idx], way[:, None, None], axis=1)[:, 0]
+    return hit, jnp.where(hit[:, None], val, jnp.uint32(0))
+
+
 def ref_route_pack(mat: jnp.ndarray, inv: jnp.ndarray,
                    fill_row: jnp.ndarray) -> jnp.ndarray:
     """Oracle for the fused routing pack kernel: (n, L) item lanes ->

@@ -232,3 +232,33 @@ def test_routing_overflow_is_miss_not_error():
     # dropped writes are misses later; everything found matches exactly
     ok = np.asarray(found)
     assert (np.asarray(out)[ok] == np.asarray(vals)[ok]).all()
+
+
+def test_dual_seq_fill_frac_weighted_by_wire_words():
+    """Satellite: the sequential dual-read fallback combines the two
+    rounds' fill fractions weighted by each round's wire words — the
+    residual-miss second round must not count as if it moved as many
+    words as the first."""
+    from repro.core.dht import _dht_read_dual_seq
+
+    cfg = DHTConfig(n_shards=8, buckets_per_shard=1024)
+    keys, vals = _kv(512)
+    new = dht_create(cfg)
+    new, _ = dht_write(new, keys[:492], vals[:492])   # most keys new-epoch
+    old = dht_create(cfg)
+    old, _ = dht_write(old, keys[492:], vals[492:])   # few in the old epoch
+
+    ones = jnp.ones((512,), bool)
+    _, _, f_new, s_new = dht_read(new, keys, ones)
+    _, _, _, s_old = dht_read(old, keys, ones & ~f_new)
+    _, _, out, found, stats = _dht_read_dual_seq(new, old, keys, ones)
+    assert bool(found.all())
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(vals))
+
+    w_n, w_o = float(s_new["wire_words"]), float(s_old["wire_words"])
+    f_n, f_o = float(s_new["fill_frac"]), float(s_old["fill_frac"])
+    expect = (f_n * w_n + f_o * w_o) / (w_n + w_o)
+    assert abs(float(stats["fill_frac"]) - expect) < 1e-6
+    # the unweighted mean would overweight the sparse second round
+    if w_n != w_o:
+        assert abs(float(stats["fill_frac"]) - 0.5 * (f_n + f_o)) > 1e-6

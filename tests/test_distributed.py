@@ -131,6 +131,71 @@ def test_sharded_execute_fn_matches_wrappers_all_modes():
     """))
 
 
+def test_sharded_l1_locality_tier_parity_and_elision():
+    """Locality tier on the shard_map/all_to_all backend (DESIGN.md §9):
+    the L1-fronted ShardedDHT must be bitwise-identical to the cacheless
+    one on a mixed read/write stream, serve real L1 hits on repeats,
+    invalidate across remote writes, and the self-traffic elision must
+    show up in the wire accounting (the local shard's block never crosses
+    the fabric)."""
+    print(_run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import DHTConfig, L1Config
+        from repro.core.distributed import ShardedDHT
+
+        mesh = jax.make_mesh((8,), ("dht",))
+        rng = np.random.default_rng(7)
+        keys = jnp.asarray(rng.integers(0, 2**31, size=(256, 20)), jnp.uint32)
+        vals = jnp.asarray(rng.integers(0, 2**31, size=(256, 26)), jnp.uint32)
+        cfg = DHTConfig(n_shards=8, buckets_per_shard=512, capacity=64)
+        a = ShardedDHT.create(mesh, cfg)
+        b = ShardedDHT.create(mesh, cfg, l1cfg=L1Config(n_sets=128, n_ways=4))
+        a.write(keys, vals); b.write(keys, vals)
+
+        # elision wire accounting: a read round ships (S-1) blocks per
+        # device, both legs (the self block is elided padding)
+        o1, f1, s1 = a.read(keys)
+        send, reply = (20 + 1 + 1), (26 + 1 + 1)
+        assert int(s1["wire_words"]) == 8 * (7 * 64) * (send + reply), \\
+            int(s1["wire_words"])
+
+        o2, f2, s2 = b.read(keys)
+        np.testing.assert_array_equal(np.asarray(o1), np.asarray(o2))
+        np.testing.assert_array_equal(np.asarray(f1), np.asarray(f2))
+        assert bool(f1.all())
+        # cached round adds the 3 coherence reply lanes, nothing else
+        assert int(s2["wire_words"]) == 8 * (7 * 64) * (send + reply + 3)
+        assert int(s2["l1_hits"]) == 0
+
+        o3, f3, s3 = b.read(keys)
+        assert int(s3["l1_hits"]) > 128, int(s3["l1_hits"])
+        np.testing.assert_array_equal(np.asarray(o1), np.asarray(o3))
+
+        # a write through the sharded engine invalidates remotely cached
+        # lines via the watermark piggyback
+        b.write(keys[:64], vals[:64] + 9); a.write(keys[:64], vals[:64] + 9)
+        o4, f4, s4 = b.read(keys)
+        o5, f5, s5 = a.read(keys)
+        np.testing.assert_array_equal(np.asarray(o4), np.asarray(o5))
+        assert bool((np.asarray(o4[:64]) == np.asarray(vals[:64] + 9)).all())
+        for n in ("keys", "vals", "meta", "csum"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(a.state, n)),
+                np.asarray(getattr(b.state, n)), n)
+
+        # satellite: the all-true valid mask is cached per batch shape
+        assert a._ones(256) is a._ones(256)
+        assert a._ones((64, 4)) is a._ones((64, 4))
+        # read_many refreshes the coherence table without disturbing parity
+        many = keys.reshape(64, 4, 20)
+        om, fm, _ = b.read_many(many)
+        assert bool(fm.all())
+        np.testing.assert_array_equal(
+            np.asarray(om.reshape(256, 26)), np.asarray(o4))
+        print("sharded locality tier OK")
+    """))
+
+
 def test_sharded_train_step_matches_single_device():
     """The same train step on a 1-device and a 4-device mesh must produce
     allclose losses — the distribution is semantics-preserving."""

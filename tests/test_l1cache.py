@@ -1,0 +1,262 @@
+"""Locality tier (DESIGN.md §9): L1 coherence protocol and the parity
+oracle — the cached read path must be bit-for-bit identical to the
+cacheless engine on mixed read/write streams, write-after-cached-read
+must return the new value (watermark invalidation), epoch changes must
+flush, INVALID-flagged buckets must never be served from L1, and the
+fused Pallas probe kernel must match its jnp oracle."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    DHTConfig,
+    L1Config,
+    dht_create,
+    dht_read,
+    dht_read_cached,
+    dht_write,
+    l1_create,
+    l1_flush,
+    migration_begin,
+    migration_finish,
+    migration_step,
+    ring_create,
+    ring_resize,
+)
+from repro.core import l1cache
+from repro.core.layout import INVALID, MODES, OCCUPIED, shard_watermark
+from repro.kernels import ref
+from repro.kernels.l1_kernel import l1_probe_pallas
+
+KW, VW = 20, 26
+
+
+def _kv(n, seed=0):
+    rng = np.random.default_rng(seed)
+    keys = jnp.asarray(rng.integers(0, 2**31, size=(n, KW)), jnp.uint32)
+    vals = jnp.asarray(rng.integers(0, 2**31, size=(n, VW)), jnp.uint32)
+    return keys, vals
+
+
+def _assert_state_equal(a, b):
+    for name in ("keys", "vals", "meta", "csum"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a, name)), np.asarray(getattr(b, name)), name)
+
+
+@pytest.fixture(params=MODES)
+def mode(request):
+    return request.param
+
+
+def test_l1_probe_kernel_matches_oracle():
+    """Pallas L1 probe (interpret mode) == ref_l1_probe == production jnp
+    path, bit for bit, hits and misses alike."""
+    rng = np.random.default_rng(2)
+    sets, ways = 32, 4
+    l1_keys = jnp.asarray(
+        rng.integers(0, 2**31, size=(sets, ways, KW)), jnp.uint32)
+    l1_vals = jnp.asarray(
+        rng.integers(0, 2**31, size=(sets, ways, VW)), jnp.uint32)
+    flags = jnp.asarray(rng.integers(0, 2, size=(sets, ways)), bool)
+    n = 200
+    set_idx = jnp.asarray(rng.integers(0, sets, size=n), jnp.int32)
+    way = rng.integers(0, ways, size=n)
+    # half the queries hit a stored line, half are foreign keys
+    qkeys = np.array(np.asarray(l1_keys)[np.asarray(set_idx), way])
+    foreign = rng.integers(0, 2, size=n).astype(bool)
+    qkeys[foreign] = rng.integers(0, 2**31, size=(int(foreign.sum()), KW))
+    qkeys = jnp.asarray(qkeys, jnp.uint32)
+
+    oh, ov = ref.ref_l1_probe(l1_keys, l1_vals, flags, qkeys, set_idx)
+    kh, kv = l1_probe_pallas(l1_keys, l1_vals, flags, qkeys, set_idx,
+                             interpret=True)
+    np.testing.assert_array_equal(np.asarray(oh), np.asarray(kh))
+    np.testing.assert_array_equal(np.asarray(ov), np.asarray(kv))
+    assert bool(oh.any()), "test must exercise real hits"
+    assert not bool(oh.all()), "test must exercise misses"
+
+    # and the production jnp path is the same function
+    l1 = l1_create(L1Config(n_sets=sets, n_ways=ways), n_shards=4)
+    l1.keys, l1.vals = l1_keys, l1_vals
+    ph, pv = l1cache.l1_probe(l1.cfg, l1, qkeys, set_idx, flags)
+    np.testing.assert_array_equal(np.asarray(ph), np.asarray(oh))
+    np.testing.assert_array_equal(np.asarray(pv), np.asarray(ov))
+
+
+def test_cached_read_parity_mixed_stream(mode):
+    """bench-scale parity oracle: interleaved writes and cached reads vs
+    the cacheless path — identical values, found flags, and final table,
+    bit for bit, while the L1 actually serves hits."""
+    cfg = DHTConfig(n_shards=8, buckets_per_shard=2048, mode=mode)
+    st_c = dht_create(cfg)
+    st_p = dht_create(cfg)
+    l1 = l1_create(L1Config(n_sets=512, n_ways=4), cfg.n_shards)
+    keys, vals = _kv(512)
+    rng = np.random.default_rng(3)
+    total_l1_hits = 0
+    for step in range(6):
+        # write a random slice with step-dependent values (updates + inserts)
+        sl = rng.integers(0, 512, size=64)
+        wk, wv = keys[sl], vals[sl] + np.uint32(step)
+        st_c, _ = dht_write(st_c, wk, wv)
+        st_p, _ = dht_write(st_p, wk, wv)
+        # cached vs plain reads of a random mix of present + absent keys;
+        # the write just invalidated every touched shard's lines (coarse
+        # watermark fence), so the first read re-fills and the second one
+        # must actually serve from L1
+        for _ in range(2):
+            ql = rng.integers(0, 512, size=256)
+            qk = keys[ql]
+            st_c, l1, out_c, found_c, sc = dht_read_cached(st_c, l1, qk)
+            st_p, out_p, found_p, _ = dht_read(st_p, qk)
+            np.testing.assert_array_equal(np.asarray(out_c),
+                                          np.asarray(out_p))
+            np.testing.assert_array_equal(np.asarray(found_c),
+                                          np.asarray(found_p))
+            total_l1_hits += int(sc["l1_hits"])
+    _assert_state_equal(st_c, st_p)
+    assert total_l1_hits > 0, "the stream must exercise the L1 fast path"
+
+
+def test_write_after_cached_read_returns_new_value(mode):
+    """Generation/watermark invalidation: a cached line must never outlive
+    a write to its key — and the stale line is not served even though the
+    write round itself never touched the L1 arrays."""
+    cfg = DHTConfig(n_shards=4, buckets_per_shard=1024, mode=mode)
+    st = dht_create(cfg)
+    l1 = l1_create(L1Config(n_sets=128, n_ways=4), cfg.n_shards)
+    keys, vals = _kv(128)
+    st, _ = dht_write(st, keys, vals)
+    st, l1, _, _, _ = dht_read_cached(st, l1, keys)          # fill
+    st, l1, _, _, s2 = dht_read_cached(st, l1, keys)         # hot
+    assert int(s2["l1_hits"]) > 100
+    st, _ = dht_write(st, keys, vals + jnp.uint32(7))
+    st, l1, out, found, s3 = dht_read_cached(st, l1, keys)
+    assert bool(found.all())
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(vals + jnp.uint32(7)))
+    assert int(s3["l1_hits"]) == 0, "stale lines must not be served"
+    st, l1, out, _, s4 = dht_read_cached(st, l1, keys)       # re-warmed
+    assert int(s4["l1_hits"]) > 100
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(vals + jnp.uint32(7)))
+
+
+def test_epoch_change_flushes_cache():
+    """A ring migration bumps the membership epoch; every line of the old
+    epoch must stop serving (the implicit whole-cache flush), and the
+    post-migration reads must still be correct."""
+    cfg = DHTConfig(n_shards=4, buckets_per_shard=1024)
+    st = dht_create(cfg, ring_create(4))
+    l1 = l1_create(L1Config(n_sets=128, n_ways=4), 8)
+    keys, vals = _kv(128)
+    st, _ = dht_write(st, keys, vals)
+    st, l1, _, _, _ = dht_read_cached(st, l1, keys)
+    st, l1, _, _, s2 = dht_read_cached(st, l1, keys)
+    assert int(s2["l1_hits"]) > 100
+
+    mig = migration_begin(st, ring_resize(st.ring, 8), batch=512)
+    while not mig.done:
+        mig, _ = migration_step(mig)
+    st, _ = migration_finish(mig)
+    st, l1, out, found, s3 = dht_read_cached(st, l1, keys)
+    assert int(s3["l1_hits"]) == 0, "old-epoch lines must be flushed"
+    assert bool(found.all())
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(vals))
+    st, l1, _, _, s4 = dht_read_cached(st, l1, keys)
+    assert int(s4["l1_hits"]) > 100, "cache must re-warm in the new epoch"
+
+
+def test_invalid_flagged_bucket_not_served():
+    """A bucket flagged INVALID (lock-free divergence) changes the shard
+    meta watermark, so cached lines backed by that shard must miss — the
+    cacheless path would report a miss, and parity demands the cached
+    path does too."""
+    cfg = DHTConfig(n_shards=4, buckets_per_shard=1024)
+    st = dht_create(cfg)
+    l1 = l1_create(L1Config(n_sets=128, n_ways=4), cfg.n_shards)
+    keys, vals = _kv(64)
+    st, _ = dht_write(st, keys, vals)
+    st, l1, _, found, _ = dht_read_cached(st, l1, keys)
+    assert bool(found.all())
+    # flag every occupied bucket INVALID (as a concurrent reader detecting
+    # divergence would)
+    meta = np.array(st.meta)
+    occ = (meta & OCCUPIED) != 0
+    meta[occ] |= INVALID
+    st.meta = jnp.asarray(meta)
+    st_p, _, found_p, _ = dht_read(st, keys)
+    assert not bool(found_p.any())
+    st, l1, out_c, found_c, sc = dht_read_cached(st, l1, keys)
+    assert not bool(found_c.any()), "INVALID buckets must not serve from L1"
+    assert int(sc["l1_hits"]) == 0
+    np.testing.assert_array_equal(np.asarray(out_c), np.zeros_like(out_c))
+
+
+def test_cached_read_through_pallas_kernel_path():
+    """Force the fused Pallas L1 probe (interpret mode) through the full
+    dht_read_cached path: results must match the jnp path bitwise."""
+    cfg = DHTConfig(n_shards=4, buckets_per_shard=1024)
+    keys, vals = _kv(128)
+    outs = {}
+    for use in (False, True):
+        old = l1cache.USE_PALLAS_L1
+        l1cache.USE_PALLAS_L1 = use
+        try:
+            st = dht_create(cfg)
+            l1 = l1_create(L1Config(n_sets=64, n_ways=4), cfg.n_shards)
+            st, _ = dht_write(st, keys, vals)
+            st, l1, _, _, _ = dht_read_cached(st, l1, keys)
+            st, l1, out, found, s = dht_read_cached(st, l1, keys)
+            assert int(s["l1_hits"]) > 0
+            outs[use] = (np.asarray(out), np.asarray(found),
+                         int(s["l1_hits"]))
+        finally:
+            l1cache.USE_PALLAS_L1 = old
+    np.testing.assert_array_equal(outs[False][0], outs[True][0])
+    np.testing.assert_array_equal(outs[False][1], outs[True][1])
+    assert outs[False][2] == outs[True][2]
+
+
+def test_watermark_monotonic_under_protocol_transitions():
+    """shard_watermark strictly increases under writes and INVALID
+    flagging — the property the coherence fence rests on."""
+    cfg = DHTConfig(n_shards=2, buckets_per_shard=256)
+    st = dht_create(cfg)
+    keys, vals = _kv(64)
+    w0 = np.asarray(shard_watermark(st.meta))
+    st, _ = dht_write(st, keys, vals)
+    w1 = np.asarray(shard_watermark(st.meta))
+    assert (w1 > w0).all()
+    st, _ = dht_write(st, keys, vals + jnp.uint32(1))        # updates
+    w2 = np.asarray(shard_watermark(st.meta))
+    assert (w2 > w1).all()
+    meta = np.array(st.meta)
+    meta[0, np.flatnonzero((meta[0] & OCCUPIED) != 0)[0]] |= INVALID
+    w3 = np.asarray(shard_watermark(jnp.asarray(meta)))
+    assert w3[0] > w2[0] and w3[1] == w2[1]
+
+
+def test_l1_flush_and_insert_dedup():
+    """l1_flush drops every line; duplicate batch items landing on one
+    (set, way) insert deterministically (highest index wins)."""
+    l1cfg = L1Config(n_sets=8, n_ways=2, key_words=KW, val_words=VW)
+    l1 = l1_create(l1cfg, 4)
+    keys, vals = _kv(4)
+    dup_keys = jnp.concatenate([keys[:1], keys[:1]])
+    dup_vals = jnp.stack([vals[0], vals[0] + jnp.uint32(9)])
+    from repro.core.hashing import hash64
+    set_idx, way_idx = l1cache.l1_slots(l1cfg, *hash64(dup_keys))
+    l1 = l1cache.l1_insert(
+        l1cfg, l1, dup_keys, dup_vals, jnp.zeros((2,), jnp.uint32),
+        jnp.zeros((2,), jnp.int32), jnp.zeros((2,), jnp.uint32), 0,
+        set_idx, way_idx, jnp.ones((2,), bool))
+    flags = jnp.ones((l1cfg.n_sets, l1cfg.n_ways), bool)
+    hit, val = l1cache.l1_probe(l1cfg, l1, dup_keys[:1], set_idx[:1], flags)
+    assert bool(hit[0])
+    np.testing.assert_array_equal(np.asarray(val[0]), np.asarray(dup_vals[1]))
+    l1 = l1_flush(l1)
+    hit, _ = l1cache.l1_probe(l1cfg, l1, dup_keys[:1], set_idx[:1],
+                              l1cache.serve_flags(l1, l1.shard_wmark, 0))
+    assert not bool(hit[0])

@@ -214,9 +214,13 @@ def test_engine_wire_accounting_mixed_round():
     st, _, _, _, _, es = dht_execute(
         st, mixed_ops(op, keys, vals), kinds=("read", "write"))
     assert routing.round_count() == 1
-    # send: base + keys + vals + op + valid; reply: vals + found + code
+    # send: base + keys + vals + op + valid; reply: vals + found + code;
+    # plus the count-exchange prologue's histogram words (S counters each
+    # way — satellite: every word on the wire is accounted)
     lanes = (1 + KW + VW + 1 + 1) + (VW + 1 + 1)
-    rows = int(es["wire_words"]) // lanes
+    words = int(es["wire_words"]) - 2 * 8
+    assert words % lanes == 0
+    rows = words // lanes
     assert rows % 8 == 0 and rows >= 256
     assert 0.0 <= float(es["fill_frac"]) <= 0.5 + 1e-6
     assert int(es["dropped"]) == 0
