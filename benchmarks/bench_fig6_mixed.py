@@ -6,8 +6,10 @@ cycle instead of a write round followed by a read round.  Each row
 reports the measured throughput of the engine path plus the collective
 rounds per batch of the legacy two-round schedule vs the engine
 (``rounds_legacy``/``rounds_engine``, counted by tracing both programs
-through ``routing.round_count``) — the perf-trajectory JSON captures the
-round-halving directly.
+through ``obs.count_traced_rounds``) — the perf-trajectory JSON captures
+the round-halving directly, and the registry gauges
+``bench.fig6.round_ratio.<dist>.<mode>`` carry it into the telemetry
+snapshot for the CI gate.
 """
 from __future__ import annotations
 
@@ -25,19 +27,10 @@ from repro.core import (
     dht_write,
     mixed_ops,
 )
-from repro.core import routing
+from repro import obs
 from repro.core.layout import MODES
 
 from .common import PAPER_RANKS, Row, make_keys_vals, modeled_ops, time_fn
-
-
-def _count_rounds(fn, *args) -> int:
-    """Collective rounds of one traced execution of ``fn``.  A fresh
-    lambda wrapper defeats jit's trace cache (a function object jit
-    already traced would not re-run its Python body, reporting 0)."""
-    routing.reset_round_count()
-    jax.make_jaxpr(lambda *a: fn(*a))(*args)
-    return routing.round_count()
 
 
 def run(quick: bool = True):
@@ -78,8 +71,10 @@ def run(quick: bool = True):
 
             t_m, (_, _val, found, code, es) = time_fn(once, iters=2, warmup=1)
             t0 = dht_create(cfg)
-            rounds_legacy = _count_rounds(legacy, t0)
-            rounds_engine = _count_rounds(mixed_fn, t0)
+            rounds_legacy = obs.count_traced_rounds(legacy, t0)
+            rounds_engine = obs.count_traced_rounds(mixed_fn, t0)
+            obs.set_gauge(f"bench.fig6.round_ratio.{dist}.{mode}",
+                          rounds_legacy / max(rounds_engine, 1))
             wrounds = float(es["rounds"])
             rts = 0.95 * (1 if mode == "lockfree" else 3) + 0.05 * (
                 2 if mode == "lockfree" else 2 + 2 * max(wrounds, 1))

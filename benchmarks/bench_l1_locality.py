@@ -10,12 +10,21 @@ traffic, so the hot-key mass the L1 absorbs comes straight off the
 paths is asserted inside the harness (the CI gate reads it from the
 derived column, next to ``l1_hit_frac >= 0.5`` and ``wire_ratio >= 1.5``
 for the Zipf(1.1) stream — the PR-5 acceptance numbers).
+
+The harness is also the telemetry acceptance check (DESIGN.md §10):
+around every measured ``dht_read_cached`` call it diffs the registry
+counters (``l1.hits``, ``engine.wire_words``, ``engine.rounds``) against
+the per-call stats dict and reports ``registry=ok`` only on bit-for-bit
+agreement, then publishes ``bench.l1_hit_frac.<dist>`` /
+``bench.l1_wire_ratio.<dist>`` gauges for the CI gate to read from the
+snapshot instead of re-parsing the derived column.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import DHTConfig, L1Config, dht_create, dht_read, dht_write
 from repro.core.dht import dht_read_cached
 from repro.core.l1cache import l1_create
@@ -58,8 +67,19 @@ def run(quick: bool = True):
         # batch 0 warms the L1 (all misses fill lines); measure the rest
         hits = queries = wire_c = wire_p = 0
         parity = True
+        reg_ok = obs.enabled()
         for i, kb in enumerate(batches):
+            h0 = obs.counter_value("l1.hits")
+            w0 = obs.counter_value("engine.wire_words")
+            r0 = obs.counter_value("engine.rounds")
             st, l1, out_c, found_c, sc = dht_read_cached(st, l1, kb)
+            if obs.enabled():
+                # bit-for-bit: registry deltas == this call's stats dict
+                reg_ok &= obs.counter_value("l1.hits") - h0 == int(
+                    sc["l1_hits"])
+                reg_ok &= obs.counter_value("engine.wire_words") - w0 == int(
+                    sc["wire_words"])
+                reg_ok &= obs.counter_value("engine.rounds") - r0 == 1
             st_plain, out_p, found_p, sp = dht_read(st_plain, kb)
             parity &= bool((np.asarray(out_c) == np.asarray(out_p)).all())
             parity &= bool(
@@ -75,12 +95,16 @@ def run(quick: bool = True):
                          iters=2)
         t_p, _ = time_fn(lambda: dht_read(st_plain, batches[-1]), iters=2)
         hit_frac = hits / max(queries, 1)
+        wire_ratio = wire_p / max(wire_c, 1)
+        obs.set_gauge(f"bench.l1_hit_frac.{dist}", hit_frac)
+        obs.set_gauge(f"bench.l1_wire_ratio.{dist}", wire_ratio)
         rows.append(Row(
             f"l1/{dist}/S{S}/read_cached", t_c / n * 1e6,
             f"l1_hit_frac={hit_frac:.3f};"
             f"wire_cached={wire_c};wire_nocache={wire_p};"
-            f"wire_ratio={wire_p / max(wire_c, 1):.2f};"
-            f"parity={'ok' if parity else 'MISMATCH'}"))
+            f"wire_ratio={wire_ratio:.2f};"
+            f"parity={'ok' if parity else 'MISMATCH'};"
+            f"registry={'ok' if reg_ok else 'MISMATCH'}"))
         rows.append(Row(
             f"l1/{dist}/S{S}/read_nocache", t_p / n * 1e6,
             f"wall_us={t_p * 1e6:.1f}"))

@@ -1,9 +1,13 @@
 """Benchmark runner: one function per paper table/figure.
 Prints ``name,us_per_call,derived`` CSV; ``--json PATH`` additionally
 writes the same rows machine-readably (``BENCH_<name>`` -> row dicts) so
-the perf trajectory is tracked across PRs.
+the perf trajectory is tracked across PRs.  The JSON payload carries a
+``telemetry`` key — the metric-registry snapshot accumulated across the
+run (DESIGN.md §10) — and ``--trace``/``--chrome-trace`` dump the
+per-round ring buffer as JSONL / perfetto-loadable ``trace_event`` JSON.
 
-    PYTHONPATH=src:. python -m benchmarks.run [--full] [--json PATH]
+    PYTHONPATH=src:. python -m benchmarks.run [--full] [--json PATH] \
+        [--trace PATH] [--chrome-trace PATH]
 """
 import argparse
 import dataclasses
@@ -21,8 +25,14 @@ def main() -> None:
                     help="comma-separated bench names (e.g. fig45,kernels)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write results as JSON {BENCH_<name>: [rows]}")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write the per-round trace ring as JSONL")
+    ap.add_argument("--chrome-trace", default=None, metavar="PATH",
+                    help="write the trace as Chrome trace_event JSON")
     args = ap.parse_args()
     quick = not args.full
+
+    from repro import obs
 
     from . import (
         bench_fig3_server_vs_dht,
@@ -81,10 +91,18 @@ def main() -> None:
         print(f"# {name} done in {time.perf_counter() - t0:.1f}s",
               file=sys.stderr)
     if args.json:
-        payload = {"failures": failures, "quick": quick, **results}
+        payload = {"failures": failures, "quick": quick,
+                   "telemetry": obs.get_registry().snapshot(), **results}
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2)
         print(f"# wrote {args.json}", file=sys.stderr)
+    if args.trace:
+        n = obs.get_tracer().to_jsonl(args.trace)
+        print(f"# wrote {args.trace} ({n} round events)", file=sys.stderr)
+    if args.chrome_trace:
+        n = obs.get_tracer().to_chrome_trace(args.chrome_trace)
+        print(f"# wrote {args.chrome_trace} ({n} trace events)",
+              file=sys.stderr)
     if failures:
         sys.exit(1)
 

@@ -29,8 +29,10 @@ from __future__ import annotations
 
 from typing import Any
 
+import jax
 import jax.numpy as jnp
 
+from ..obs import metrics as obs_metrics
 from . import l1cache, routing
 from .hashing import hash64
 from .layout import DHTConfig, DHTState, shard_watermark
@@ -201,6 +203,14 @@ def dht_read_cached(
         "wire_words": es["wire_words"],
         "fill_frac": es["fill_frac"],
     }
+    # L1 front-end telemetry (host flush; the residue round recorded
+    # itself inside dht_execute).  Sharded calls are traced — their
+    # wrapper (ShardedDHT.read) flushes the l1_hits stat lane instead.
+    if (obs_metrics.enabled() and axis_name is None
+            and not isinstance(keys, jax.core.Tracer)
+            and not isinstance(state.keys, jax.core.Tracer)):
+        obs_metrics.inc("l1.hits", int(stats["l1_hits"]))
+        obs_metrics.inc("l1.queries", int(jnp.sum(valid)))
     return state, l1, vals, found, stats
 
 
@@ -283,14 +293,12 @@ def _dht_read_dual_seq(
     vals, found = routing.merge_dual_epoch(
         found_new, val_new, found_old, val_old
     )
-    # fill_frac is a fraction of each round's buffer: combine weighted by
-    # the rounds' wire words, not a flat mean — the second round usually
-    # carries only the residual misses, so its (large) padding fraction
-    # must not count as if it moved as many words as the first
-    w_new = s_new["wire_words"].astype(jnp.float32)
-    w_old = s_old["wire_words"].astype(jnp.float32)
-    total = jnp.maximum(w_new + w_old, 1.0)
-    fill = (s_new["fill_frac"] * w_new + s_old["fill_frac"] * w_old) / total
+    # fill_frac is a fraction of each round's buffer: merge_wire_stats
+    # combines the rounds weighted by their wire words, not a flat mean —
+    # the second round usually carries only the residual misses, so its
+    # (large) padding fraction must not count as if it moved as many
+    # words as the first
+    wire = obs_metrics.merge_wire_stats(s_new, s_old)
     stats = {
         "hits": (s_new["hits"] + s_old["hits"]).astype(jnp.int32),
         "misses": jnp.sum(valid & ~found).astype(jnp.int32),
@@ -298,8 +306,8 @@ def _dht_read_dual_seq(
         "dropped": s_new["dropped"] + s_old["dropped"],
         "lock_tokens": s_new["lock_tokens"] + s_old["lock_tokens"],
         "epoch": s_new["epoch"],
-        "wire_words": s_new["wire_words"] + s_old["wire_words"],
-        "fill_frac": fill,
+        "wire_words": wire["wire_words"],
+        "fill_frac": wire["fill_frac"],
         "hits_old_epoch": s_old["hits"],
     }
     return state, prev, vals, found, stats

@@ -9,12 +9,15 @@ how the mesh is otherwise partitioned for the model (DP/TP/PP axes).
 from __future__ import annotations
 
 import dataclasses
+import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..obs import metrics as obs_metrics
+from ..obs import trace as obs_trace
 from . import dht as dht_ops
 from . import l1cache
 from .compat import shard_map
@@ -35,7 +38,7 @@ def _psum_stats(stats: dict, axes) -> dict:
     for k, v in stats.items():
         if k == "code":
             out[k] = v  # per-item, stays sharded
-        elif k in ("rounds", "epoch"):
+        elif k in ("rounds", "epoch", "dispatch_rounds"):
             out[k] = jax.lax.pmax(v, axes)  # replicated/uniform scalars
         elif k == "fill_frac":
             out[k] = jax.lax.pmean(v, axes)  # per-device fraction -> mean
@@ -199,7 +202,8 @@ class ShardedDHT:
 
         stats_spec = {k: P() for k in
                       ("mismatches", "rounds", "lock_tokens", "dropped",
-                       "epoch", "wire_words", "fill_frac")}
+                       "epoch", "wire_words", "wire_send_words",
+                       "wire_reply_words", "fill_frac", "dispatch_rounds")}
         return jax.jit(
             shard_map(
                 fn, mesh=self.mesh,
@@ -330,32 +334,45 @@ class ShardedDHT:
             self._ones_cache[shape] = mask
         return mask
 
-    # convenience stateful wrappers (closures come from the keyed cache)
+    # convenience stateful wrappers (closures come from the keyed cache).
+    # Each is the host side of one executed engine round, so each flushes
+    # the round's (already psum'd) stat lanes into the telemetry registry
+    # — the jitted bodies above never touch it (jit-safety, DESIGN.md
+    # §10).  Per-process registries merge via obs.metrics.merge_snapshots.
     def write(self, keys, vals, valid=None):
+        t0 = time.perf_counter()
         valid = self._ones(keys.shape[0]) if valid is None else valid
         if self.l1 is not None:
             fn = self._cached_fn("write_refresh", self.write_refresh_fn,
                                  extra=(self.l1cfg,))
             self.state, self.l1, stats = fn(
                 self.state, self.l1, keys, vals, valid)
-            return stats
-        fn = self._cached_fn("write", self.write_fn)
-        self.state, stats = fn(self.state, keys, vals, valid)
+        else:
+            fn = self._cached_fn("write", self.write_fn)
+            self.state, stats = fn(self.state, keys, vals, valid)
+        obs_trace.record_round("sharded.write", stats,
+                               ops={"write": int(keys.shape[0])}, t_start=t0)
         return stats
 
     def read(self, keys, valid=None):
+        t0 = time.perf_counter()
         valid = self._ones(keys.shape[0]) if valid is None else valid
         if self.l1 is not None:
             fn = self._cached_fn("read_cached", self.read_cached_fn,
                                  extra=(self.l1cfg,))
             self.state, self.l1, vals, found, stats = fn(
                 self.state, self.l1, keys, valid)
-            return vals, found, stats
-        fn = self._cached_fn("read", self.read_fn)
-        self.state, vals, found, stats = fn(self.state, keys, valid)
+            source = "sharded.read_cached"
+        else:
+            fn = self._cached_fn("read", self.read_fn)
+            self.state, vals, found, stats = fn(self.state, keys, valid)
+            source = "sharded.read"
+        obs_trace.record_round(source, stats,
+                               ops={"read": int(keys.shape[0])}, t_start=t0)
         return vals, found, stats
 
     def read_many(self, keys, valid=None):
+        t0 = time.perf_counter()
         if valid is None:
             valid = self._ones(keys.shape[:2])
         if self.l1 is not None:
@@ -364,10 +381,18 @@ class ShardedDHT:
                                  extra=(self.l1cfg,))
             self.state, self.l1, vals, found, stats = fn(
                 self.state, self.l1, keys, valid)
-            return vals, found, stats
-        fn = self._cached_fn("read_many", self.read_many_fn)
-        self.state, vals, found, stats = fn(self.state, keys, valid)
+        else:
+            fn = self._cached_fn("read_many", self.read_many_fn)
+            self.state, vals, found, stats = fn(self.state, keys, valid)
+        obs_trace.record_round(
+            "sharded.read_many", stats,
+            ops={"read": int(keys.shape[0] * keys.shape[1])}, t_start=t0)
         return vals, found, stats
+
+    def telemetry_snapshot(self) -> dict:
+        """This process's registry snapshot (see
+        ``obs.metrics.merge_snapshots`` for cross-process aggregation)."""
+        return obs_metrics.get_registry().snapshot()
 
     # -- elastic membership (DESIGN.md §4-5) ------------------------------
     @property
@@ -404,6 +429,7 @@ class ShardedDHT:
         bspec = NamedSharding(self.mesh, P(mesh_axes(self.mesh)))
         moved = evicted = 0
         for lo in range(0, plan.n_moved, batch):
+            t_b = time.perf_counter()
             idx = plan.src[lo:lo + batch]
             n = int(idx.shape[0])
             pad = np.zeros((batch,), np.int64)
@@ -413,6 +439,8 @@ class ShardedDHT:
             valid = jax.device_put(
                 jnp.asarray(np.arange(batch) < n), bspec)
             new_state, _, found, code, es = efn(new_state, keys, vals, valid)
+            obs_trace.record_round("sharded.migrate", es,
+                                   ops={"migrate": n}, t_start=t_b)
             assert int(es["dropped"]) == 0
             moved += int(jnp.sum(valid & ~found))
             evicted += int(jnp.sum(code == dht_ops.W_EVICT))
@@ -430,9 +458,13 @@ class ShardedDHT:
         final = DHTState(self.cfg, new_state.keys, new_state.vals,
                          jnp.asarray(meta), jnp.asarray(csum), new_ring)
         self.state = jax.device_put(final, _state_shardings(self.mesh, final))
-        return {"n_live": plan.n_live, "n_planned": plan.n_moved,
-                "moved": moved, "evicted_at_dest": evicted,
-                "epoch": int(new_ring.epoch)}
+        result = {"n_live": plan.n_live, "n_planned": plan.n_moved,
+                  "moved": moved, "evicted_at_dest": evicted,
+                  "epoch": int(new_ring.epoch)}
+        obs_metrics.inc("migrate.moved", moved)
+        obs_metrics.inc("migrate.evicted", evicted)
+        obs_trace.record_event("sharded.apply_ring", result)
+        return result
 
     def leave(self, shard_id: int, batch: int = 512) -> dict:
         from .membership import ring_create, ring_leave

@@ -45,6 +45,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from ..obs import metrics as obs_metrics
 from .hashing import checksum32, murmur32_words
 
 # Pallas L1-probe switch: None = auto (TPU only), True/False forces it
@@ -116,6 +117,7 @@ class L1State:
 
 
 def l1_create(cfg: L1Config, n_shards: int) -> L1State:
+    obs_metrics.inc("l1.creates")
     s, w = cfg.n_sets, cfg.n_ways
     return L1State(
         cfg=cfg,
@@ -133,6 +135,8 @@ def l1_create(cfg: L1Config, n_shards: int) -> L1State:
 
 def l1_flush(l1: L1State) -> L1State:
     """Drop every line (epoch changes do this implicitly via the stamp)."""
+    if not isinstance(l1.live, jax.core.Tracer):
+        obs_metrics.inc("l1.flushes")
     return dataclasses.replace(l1, live=jnp.zeros_like(l1.live))
 
 

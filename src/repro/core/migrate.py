@@ -32,10 +32,13 @@ Conveniences: :func:`dht_resize` (S -> S' shards), :func:`shard_leave`,
 from __future__ import annotations
 
 import dataclasses
+import time
 
 import jax.numpy as jnp
 import numpy as np
 
+from ..obs import metrics as obs_metrics
+from ..obs import trace as obs_trace
 from .dht import (
     W_EVICT,
     dht_execute,
@@ -182,6 +185,7 @@ def migration_step(mig: Migration) -> tuple[Migration, dict[str, int]]:
     plan = mig.plan
     if mig.done:
         return mig, {"moved": 0, "skipped": 0, "remaining": 0}
+    t0 = time.perf_counter()
     lo = mig.cursor
     hi = min(lo + mig.batch, plan.n_moved)
     idx = plan.src[lo:hi]
@@ -217,12 +221,21 @@ def migration_step(mig: Migration) -> tuple[Migration, dict[str, int]]:
     mig.moved += stepped
     mig.skipped += skipped
     mig.evicted += evicted
-    return mig, {
+    step = {
         "moved": stepped,
         "skipped": skipped,
         "evicted": evicted,
         "remaining": plan.n_moved - mig.cursor,
     }
+    # the engine round recorded itself (eager dht_execute); this event
+    # wraps it with the migration-level accounting
+    obs_metrics.inc("migrate.steps")
+    obs_metrics.inc("migrate.moved", stepped)
+    obs_metrics.inc("migrate.skipped", skipped)
+    obs_metrics.inc("migrate.evicted", evicted)
+    obs_trace.record_event("migrate.step", step, t_start=t0,
+                           ops={"migrate": n})
+    return mig, step
 
 
 def migration_read(mig: Migration, keys: jnp.ndarray, valid=None):

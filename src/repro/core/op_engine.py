@@ -33,11 +33,14 @@ dual-epoch read is therefore one dispatch, not two sequential reads.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Sequence
 
 import jax
 import jax.numpy as jnp
 
+from ..obs import metrics as obs_metrics
+from ..obs import trace as obs_trace
 from . import routing
 from .hashing import (
     base_bucket,
@@ -612,6 +615,14 @@ def dht_execute(
 
     assert placement is None or prev is None, (
         "precomputed placement is single-epoch only")
+    # Telemetry (DESIGN.md §10): the engine self-records only on the
+    # eager host path — under jit/shard_map the stat lanes ride the
+    # estats return value and the *caller's* host code flushes them
+    # (e.g. the ShardedDHT wrappers), so nothing here runs at trace time.
+    rec = (obs_metrics.enabled() and axis_name is None
+           and not isinstance(ops.keys, jax.core.Tracer)
+           and not isinstance(state.keys, jax.core.Tracer))
+    t0 = time.perf_counter() if rec else 0.0
     elidable = (axis_name is not None and kinds == ("read",)
                 and prev is None and ops.op is None)
     elide = elidable if elide_self is None else bool(elide_self)
@@ -639,7 +650,9 @@ def dht_execute(
     if prev is not None:
         payloads.append(ops.esel.astype(jnp.int32))
     payloads.append(payload_valid)
+    t_dispatch = time.perf_counter() if rec else 0.0
     inc = routing.dispatch(binned, payloads, axis_name)
+    t_apply = time.perf_counter() if rec else 0.0
 
     def _unpack(parts):
         it = iter(parts)
@@ -688,6 +701,7 @@ def dht_execute(
          gen, wpre, wpost) = out
         n_mm, tok = jnp.sum(n_mm), jnp.sum(tok)
         rounds = jnp.max(rounds)
+        t_collect = time.perf_counter() if rec else 0.0
         coll = routing.collect(
             binned, _replies(val, found, code, gen, wpre, wpost), None,
             block_rows=l1_meta)
@@ -749,7 +763,12 @@ def dht_execute(
         "dropped": binned.n_dropped,
         "epoch": binned.epoch,
         "wire_words": wire["wire_words"],
+        "wire_send_words": wire["wire_send_words"],
+        "wire_reply_words": wire["wire_reply_words"],
         "fill_frac": wire["fill_frac"],
+        # one dispatch/collect cycle per execute — the host-side flush
+        # advances engine.rounds by this lane (pmax'd across shards)
+        "dispatch_rounds": jnp.int32(1),
     }
     if l1_meta:
         estats["bucket_gen"] = gen_out.astype(jnp.uint32)
@@ -764,6 +783,18 @@ def dht_execute(
         prows = prev.meta.shape[0]
         prev_out = _state_from(
             prev, {k2: v2[:prows] for k2, v2 in pslab.items()})
+    if rec:
+        if ops.op is None:
+            mix = {kinds[0]: int(jnp.sum(ops.valid))}
+        else:
+            mix = {name: int(jnp.sum(ops.valid & (ops.op == tag)))
+                   for name, tag in (("read", OP_READ), ("write", OP_WRITE),
+                                     ("migrate", OP_MIGRATE))
+                   if name in kinds}
+        obs_trace.record_round(
+            "engine." + "+".join(kinds), estats, ops=mix, t_start=t0,
+            phase_marks=[("bin", t0), ("dispatch", t_dispatch),
+                         ("apply", t_apply), ("collect", t_collect)])
     return state_out, prev_out, val_out, found_out, code_out, estats
 
 

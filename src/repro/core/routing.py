@@ -58,13 +58,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-# Collective-round bookkeeping: each dispatch() call opens one routing
-# round (its collect() is the same round's reply leg, so only dispatches
-# are counted).  Counted at Python call time, so under jit it counts the
-# rounds of one traced program — exactly "collective rounds per logical
-# op" (DESIGN.md §8).  The count-exchange capacity prologue does NOT
-# increment this: it is host-side metadata, not a data round.
-_DISPATCH_ROUNDS = 0
+from ..obs import metrics as _obs
 
 # Pallas route-kernel switch: None = auto (TPU only — interpret mode on
 # CPU validates semantics, not speed), True/False forces it (tests flip
@@ -76,16 +70,6 @@ def _pallas_route_active() -> bool:
     if USE_PALLAS_ROUTE is not None:
         return USE_PALLAS_ROUTE
     return jax.default_backend() == "tpu"
-
-
-def reset_round_count() -> None:
-    global _DISPATCH_ROUNDS
-    _DISPATCH_ROUNDS = 0
-
-
-def round_count() -> int:
-    """Routing rounds issued since :func:`reset_round_count`."""
-    return _DISPATCH_ROUNDS
 
 
 @dataclasses.dataclass
@@ -386,8 +370,16 @@ def dispatch(
       - local:       (n_dest, capacity, ...) global view, vmapped downstream
     Plus an implicit validity channel the caller packs into the payload.
     """
-    global _DISPATCH_ROUNDS
-    _DISPATCH_ROUNDS += 1
+    # Each dispatch() opens one routing round (collect() is the same
+    # round's reply leg).  The ``routing.dispatches`` counter ticks in
+    # this Python body: per real round in eager code, per round of one
+    # traced program under jit (see obs.trace.count_traced_rounds).  The
+    # count-exchange capacity prologue does NOT pass here: it is
+    # host-side metadata, not a data round (DESIGN.md §3/§8).  Executed
+    # rounds — which the trace cache would hide from any Python-side
+    # count — are tallied separately by the host flush in
+    # obs.trace.record_round (counter ``engine.rounds``).
+    _obs.inc("routing.dispatches")
     mat, specs, fill_row = _encode(payloads, 1, fills)
     buf = _scatter_to_bins(b, mat, fill_row)            # (rows, L)
     rows, width = buf.shape
@@ -424,6 +416,7 @@ def collect(
     reply lane for ALL its buffer rows therefore broadcasts one word per
     shard to every device with zero extra collectives — the L1 coherence
     piggyback rides here.  Returns ``(items, blocks)`` in that case."""
+    _obs.inc("routing.collects")
     tail_from = 2 if axis_name is None else 1
     mat, specs, fill_row = _encode(replies, tail_from, fills)
     rows, width = b.n_dest * b.capacity, mat.shape[1]
@@ -460,6 +453,10 @@ def wire_stats(b: Binned, send_lanes: int, reply_lanes: int, *,
     return {
         "wire_words": jnp.int32(rows * (send_lanes + reply_lanes)
                                 + prologue_words),
+        # per-leg split for the trace schema (prologue words ride the
+        # send leg — the count histogram travels with the request)
+        "wire_send_words": jnp.int32(rows * send_lanes + prologue_words),
+        "wire_reply_words": jnp.int32(rows * reply_lanes),
         "fill_frac": jnp.float32(1.0) - kept / jnp.float32(max(rows, 1)),
     }
 

@@ -19,6 +19,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from ..obs import metrics as obs_metrics
 from . import dht as dht_ops
 from . import interp as interp_ops
 from . import membership, migrate, neighbors, routing
@@ -142,6 +143,7 @@ def lookup_or_compute(
             stats = {"hits": rstats["hits"], "misses": rstats["misses"],
                      "mismatches": rstats["mismatches"],
                      "stored": jnp.int32(0)}
+            _record_provenance(stats)
             return state, cached, found, stats
         computed = compute_fn(inputs)
         outputs = jnp.where(found[:, None], cached, computed)
@@ -150,6 +152,7 @@ def lookup_or_compute(
         stats = {"hits": rstats["hits"], "misses": rstats["misses"],
                  "mismatches": rstats["mismatches"],
                  "stored": wstats["inserted"]}
+        _record_provenance(stats)
         return state, outputs, found, stats
 
     keys = make_keys(cfg, inputs)
@@ -181,6 +184,10 @@ def _interp_tail(cfg: SurrogateConfig, inputs, points, val_words, found,
     step = neighbors.lattice_step(points[:, 0], cfg.sig_digits)
     outputs, provenance, istats = interp_ops.interpolate(
         inputs, points, values, found, step, icfg)
+    # single transport here, but the shared helper keeps the wire-merge
+    # semantics (wire-word-weighted fill) in ONE place with the
+    # dual-epoch fallback (core/dht._dht_read_dual_seq)
+    wire = obs_metrics.merge_wire_stats(transport_stats)
     stats = {
         "exact": istats["exact"],
         "interpolated": istats["interpolated"],
@@ -190,10 +197,30 @@ def _interp_tail(cfg: SurrogateConfig, inputs, points, val_words, found,
         "mismatches": transport_stats["mismatches"],
         "dropped": transport_stats["dropped"],
         "epoch": transport_stats["epoch"],
-        "wire_words": transport_stats["wire_words"],
-        "fill_frac": transport_stats["fill_frac"],
+        "wire_words": wire["wire_words"],
+        "fill_frac": wire["fill_frac"],
     }
     return outputs, provenance, stats
+
+
+# provenance lanes flushed to the registry by the lookup_* host paths
+_PROV_LANES = ("exact", "interpolated", "hits", "misses", "stored",
+               "probe_hits")
+
+
+def _record_provenance(stats: dict) -> None:
+    """Host-side flush of the surrogate provenance counters
+    (``surrogate.exact`` / ``.interpolated`` / ``.misses`` / ...).
+    Traced values are skipped — under jit the caller holding the
+    concrete stats is responsible for recording (jit-safety rule,
+    DESIGN.md §10)."""
+    if not obs_metrics.enabled():
+        return
+    for lane in _PROV_LANES:
+        v = stats.get(lane)
+        if v is None or isinstance(v, jax.core.Tracer):
+            continue
+        obs_metrics.inc(f"surrogate.{lane}", int(v))
 
 
 def lookup_or_interpolate(
@@ -240,6 +267,7 @@ def lookup_or_interpolate(
     outputs, provenance, stats = _interp_tail(
         cfg, inputs, points, val_words, found, icfg, valid,
         probe_hits=rstats["hits"], transport_stats=rstats)
+    _record_provenance(stats)
     if prev is None:
         return state, outputs, provenance, stats
     return state, prev, outputs, provenance, stats
@@ -277,12 +305,14 @@ def lookup_interpolate_or_compute(
             cfg, state, inputs, icfg, axis_name=axis_name)
         miss = provenance == PROV_MISS
         if not bool(miss.any()):
+            obs_metrics.inc("surrogate.stored", 0)
             return state, resolved_out, provenance, \
                 {**stats, "stored": jnp.int32(0)}
         computed = compute_fn(inputs)
         outputs = jnp.where(miss[:, None], computed, resolved_out)
         state, wstats = store(cfg, state, inputs, computed, valid=miss,
                               axis_name=axis_name)
+        obs_metrics.inc("surrogate.stored", int(wstats["inserted"]))
         return state, outputs, provenance, \
             {**stats, "stored": wstats["inserted"]}
 

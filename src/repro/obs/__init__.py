@@ -1,0 +1,24 @@
+"""Telemetry substrate: metric registry, per-round tracing, reporting.
+
+- :mod:`repro.obs.metrics` — counters / gauges / fixed-bucket histograms
+  with deterministic snapshots and cross-shard merge.
+- :mod:`repro.obs.trace`  — bounded ring buffer of per-round events,
+  JSONL + Chrome ``trace_event`` export.
+- :mod:`repro.obs.report` — ``python -m repro.obs.report`` CLI rendering
+  a round timeline and top-metrics summary.
+
+jit-safety rules in DESIGN.md §10.  ``OBS_DISABLED=1`` no-ops the lot.
+"""
+from . import metrics, trace
+from .metrics import (counter_value, counting, disabled, enabled,
+                      get_registry, inc, merge_snapshots, merge_wire_stats,
+                      observe, set_enabled, set_gauge)
+from .trace import (count_traced_rounds, get_tracer, record_event,
+                    record_round)
+
+__all__ = [
+    "metrics", "trace", "counter_value", "counting", "disabled",
+    "enabled", "get_registry", "inc", "merge_snapshots",
+    "merge_wire_stats", "observe", "set_enabled", "set_gauge",
+    "count_traced_rounds", "get_tracer", "record_event", "record_round",
+]

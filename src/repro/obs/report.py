@@ -1,0 +1,124 @@
+"""Render telemetry: round timeline + top-metrics summary.
+
+Usage::
+
+    python -m repro.obs.report --bench BENCH.json           # registry snapshot
+    python -m repro.obs.report --trace trace.jsonl          # round timeline
+    python -m repro.obs.report --bench BENCH.json --trace trace.jsonl
+
+``--bench`` takes either a ``benchmarks/run.py --json`` payload (reads
+its ``telemetry`` key) or a bare registry-snapshot JSON; multiple
+``--bench`` files (e.g. one per shard process) are merged with
+:func:`repro.obs.metrics.merge_snapshots` before rendering.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from . import metrics
+
+_BAR = 40
+
+
+def _fmt_count(v: float) -> str:
+    for unit, div in (("G", 1e9), ("M", 1e6), ("k", 1e3)):
+        if abs(v) >= div:
+            return f"{v / div:.2f}{unit}"
+    return f"{v:.6g}" if isinstance(v, float) and v != int(v) else f"{int(v)}"
+
+
+def load_snapshot(path: str) -> dict:
+    with open(path) as f:
+        payload = json.load(f)
+    return payload.get("telemetry", payload)
+
+
+def render_summary(snap: dict, top: int = 20) -> str:
+    lines = ["== metric registry =="]
+    counters = snap.get("counters", {})
+    if counters:
+        lines.append("-- counters --")
+        ranked = sorted(counters.items(), key=lambda kv: -kv[1])[:top]
+        width = max(len(k) for k, _ in ranked)
+        for k, v in ranked:
+            lines.append(f"  {k:<{width}}  {_fmt_count(v):>10}")
+    gauges = snap.get("gauges", {})
+    if gauges:
+        lines.append("-- gauges --")
+        width = max(len(k) for k in gauges)
+        for k in sorted(gauges):
+            lines.append(f"  {k:<{width}}  {gauges[k]:>10.4f}")
+    hists = snap.get("histograms", {})
+    if hists:
+        lines.append("-- histograms --")
+        for k in sorted(hists):
+            h = hists[k]
+            n = int(h["count"])
+            mean = (float(h["sum"]) / n) if n else 0.0
+            p50 = metrics.histogram_quantile(h, 0.5)
+            p99 = metrics.histogram_quantile(h, 0.99)
+            lines.append(
+                f"  {k}: n={n} mean={mean:.4g} p50={p50:.4g} "
+                f"p99={p99:.4g} max={h.get('max')}")
+    if len(lines) == 1:
+        lines.append("  (registry empty)")
+    return "\n".join(lines)
+
+
+def render_timeline(events: list[dict], last: int = 30) -> str:
+    """ASCII round timeline: per-event duration bar + phase breakdown."""
+    lines = [f"== round timeline (last {min(last, len(events))} "
+             f"of {len(events)} events) =="]
+    tail = events[-last:]
+    if not tail:
+        lines.append("  (trace empty)")
+        return "\n".join(lines)
+    dmax = max((e.get("dur", 0.0) for e in tail), default=0.0) or 1.0
+    for e in tail:
+        dur_us = e.get("dur", 0.0) * 1e6
+        bar = "#" * max(1, int(_BAR * e.get("dur", 0.0) / dmax))
+        stats = e.get("stats", {})
+        extras = []
+        for key, label in (("wire_words", "wire"), ("fill_frac", "fill"),
+                           ("l1_hits", "l1"), ("dropped", "drop")):
+            if key in stats:
+                extras.append(f"{label}={_fmt_count(stats[key])}")
+        spans = e.get("spans", {})
+        if spans and dur_us > 0:
+            mix = " ".join(
+                f"{p}:{100 * spans[p][1] * 1e6 / dur_us:.0f}%"
+                for p in ("bin", "dispatch", "apply", "collect")
+                if p in spans)
+            if mix:
+                extras.append(mix)
+        lines.append(f"  {e.get('source', '?'):<24} {dur_us:>9.1f}us "
+                     f"|{bar:<{_BAR}}| {' '.join(extras)}")
+    return "\n".join(lines)
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs.report", description=__doc__)
+    ap.add_argument("--bench", action="append", default=[],
+                    help="BENCH json (or bare snapshot); repeatable, merged")
+    ap.add_argument("--trace", help="trace JSONL from obs.trace")
+    ap.add_argument("--top", type=int, default=20,
+                    help="top-N counters to show")
+    ap.add_argument("--last", type=int, default=30,
+                    help="last-N trace events to show")
+    args = ap.parse_args(argv)
+    if not args.bench and not args.trace:
+        ap.error("need --bench and/or --trace")
+    if args.trace:
+        with open(args.trace) as f:
+            events = [json.loads(line) for line in f if line.strip()]
+        print(render_timeline(events, last=args.last))
+    if args.bench:
+        snap = metrics.merge_snapshots(load_snapshot(p) for p in args.bench)
+        print(render_summary(snap, top=args.top))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,242 @@
+"""Per-round trace recorder — bounded ring buffer of structured events.
+
+Every *executed* engine round (eager ``dht_execute``, each jitted call a
+``ShardedDHT`` wrapper makes, each ``migration_step`` batch) lands one
+:class:`RoundEvent` here via :func:`record_round`, carrying the phase
+spans (bin / dispatch / apply / collect), the op mix, and every scalar
+stat lane of the round (wire words both legs, fill fraction, capacity
+vs. load, L1 hits, lock-retry rounds, epoch/watermark stamps — whatever
+the round's ``estats`` held).  The ring is bounded
+(``OBS_TRACE_MAXLEN``, default 4096 events) so long benchmark loops
+cannot grow host memory without bound.
+
+Exports: :meth:`TraceRecorder.to_jsonl` (one JSON object per line, the
+schema in DESIGN.md §10) and :meth:`TraceRecorder.to_chrome_trace`
+(Chrome ``trace_event`` JSON — load the file in https://ui.perfetto.dev
+to see rounds and their phase spans on a timeline).
+
+jit-safety: :func:`record_round` is host-only.  The engine calls it only
+on the eager path (no tracers in sight); under ``jit``/``shard_map`` the
+stat lanes ride the return value and the *caller's* host code (e.g. the
+``ShardedDHT`` wrappers) records them.  Phase spans are host
+``perf_counter`` marks around the engine's issue points; the event's
+total ``dur`` is measured *after* the stat lanes are fetched, so it
+includes the device work those scalars depend on.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from collections import deque
+from typing import Sequence
+
+from . import metrics
+
+__all__ = ["RoundEvent", "TraceRecorder", "get_tracer", "record_round",
+           "record_event", "count_traced_rounds", "PHASES"]
+
+PHASES = ("bin", "dispatch", "apply", "collect")
+
+# estats lanes -> registry counters (plain additive flush).
+_COUNTER_LANES = {
+    "wire_words": "engine.wire_words",
+    "wire_send_words": "engine.wire_send_words",
+    "wire_reply_words": "engine.wire_reply_words",
+    "dropped": "engine.dropped",
+    "mismatches": "engine.mismatches",
+    "lock_tokens": "engine.lock_tokens",
+    "rounds": "engine.write_rounds",
+    "inserted": "engine.inserted",
+    "evicted": "engine.evicted",
+    "hits": "dht.hits",
+    "misses": "dht.misses",
+    "l1_hits": "l1.hits",
+}
+
+
+@dataclasses.dataclass
+class RoundEvent:
+    """One recorded round.  ``ts``/``dur`` in seconds on the host
+    ``perf_counter`` clock; ``spans`` maps phase -> (start, dur)."""
+
+    source: str
+    ts: float
+    dur: float
+    spans: dict
+    ops: dict
+    stats: dict
+
+    def to_json(self) -> dict:
+        return {
+            "source": self.source,
+            "ts": self.ts,
+            "dur": self.dur,
+            "spans": {k: [v[0], v[1]] for k, v in self.spans.items()},
+            "ops": dict(self.ops),
+            "stats": dict(self.stats),
+        }
+
+
+class TraceRecorder:
+    """Bounded ring buffer of :class:`RoundEvent`."""
+
+    def __init__(self, maxlen: int | None = None):
+        if maxlen is None:
+            maxlen = int(os.environ.get("OBS_TRACE_MAXLEN", "4096"))
+        self._events: deque[RoundEvent] = deque(maxlen=maxlen)
+        self.n_recorded = 0        # lifetime count (ring may have evicted)
+
+    @property
+    def maxlen(self) -> int:
+        return self._events.maxlen or 0
+
+    def record(self, ev: RoundEvent) -> None:
+        self._events.append(ev)
+        self.n_recorded += 1
+
+    def events(self) -> list[RoundEvent]:
+        return list(self._events)
+
+    def clear(self) -> None:
+        self._events.clear()
+        self.n_recorded = 0
+
+    def to_jsonl(self, path: str) -> int:
+        """One JSON object per line; returns the number of events."""
+        evs = self.events()
+        with open(path, "w") as f:
+            for ev in evs:
+                f.write(json.dumps(ev.to_json(), sort_keys=True) + "\n")
+        return len(evs)
+
+    def to_chrome_trace(self, path: str) -> int:
+        """Chrome ``trace_event`` JSON (complete "X" events, µs clock):
+        one event per round plus one per phase span, nested on the same
+        track so perfetto renders rounds with their phase breakdown."""
+        events = []
+        for ev in self.events():
+            ts_us = ev.ts * 1e6
+            events.append({
+                "name": ev.source, "cat": "round", "ph": "X",
+                "ts": ts_us, "dur": max(ev.dur, 0.0) * 1e6,
+                "pid": 1, "tid": 1,
+                "args": {"ops": ev.ops, **ev.stats},
+            })
+            for phase, (start, dur) in ev.spans.items():
+                events.append({
+                    "name": phase, "cat": "phase", "ph": "X",
+                    "ts": start * 1e6, "dur": max(dur, 0.0) * 1e6,
+                    "pid": 1, "tid": 1, "args": {},
+                })
+        with open(path, "w") as f:
+            json.dump({"traceEvents": events, "displayTimeUnit": "ms"}, f)
+        return len(events)
+
+
+_TRACER = TraceRecorder()
+
+
+def get_tracer() -> TraceRecorder:
+    return _TRACER
+
+
+def _scalarize(stats: dict) -> dict:
+    """Fetch the scalar stat lanes as plain Python numbers (one pass;
+    non-scalar lanes like watermark vectors are skipped)."""
+    import numpy as np
+
+    out = {}
+    for k, v in stats.items():
+        try:
+            a = np.asarray(v)
+        except Exception:
+            continue
+        if a.ndim != 0 or a.dtype.kind not in "biuf":
+            continue
+        out[k] = a.item()
+    return out
+
+
+def record_round(source: str, stats: dict, *, ops: dict | None = None,
+                 t_start: float | None = None,
+                 phase_marks: Sequence[tuple[str, float]] = ()) -> None:
+    """Flush one executed round: trace event + registry accumulation.
+
+    ``stats`` is the round's stat-lane dict (jax scalars fine — fetched
+    here, once).  ``phase_marks`` is ``[(phase, start_time), ...]`` in
+    order; each phase ends where the next begins, the last at record
+    time.  ``engine.rounds`` advances by the round's ``dispatch_rounds``
+    lane (default 1) — this is the host-side executed-round counter that
+    jit trace-caching cannot defeat."""
+    if not metrics.enabled():
+        return
+    scal = _scalarize(stats)
+    now = time.perf_counter()
+    ts = t_start if t_start is not None else now
+    dur = max(now - ts, 0.0) if t_start is not None else 0.0
+
+    reg = metrics.get_registry()
+    reg.inc("engine.rounds", int(scal.get("dispatch_rounds", 1)))
+    for lane, name in _COUNTER_LANES.items():
+        if lane in scal:
+            reg.inc(name, int(scal[lane]))
+    if "fill_frac" in scal:
+        reg.observe("engine.fill_frac", scal["fill_frac"],
+                    edges=metrics.FRACTION_EDGES)
+    if t_start is not None:
+        reg.observe("engine.round_latency_us", dur * 1e6,
+                    edges=metrics.LATENCY_EDGES_US)
+    total_ops = 0
+    for kind, n in (ops or {}).items():
+        reg.inc(f"engine.ops.{kind}", int(n))
+        total_ops += int(n)
+    if total_ops:
+        reg.observe("engine.batch_size", total_ops,
+                    edges=metrics.SIZE_EDGES)
+    if "l1_hits" in scal:
+        reg.inc("l1.queries", total_ops)
+
+    spans = {}
+    marks = list(phase_marks)
+    for i, (phase, start) in enumerate(marks):
+        end = marks[i + 1][1] if i + 1 < len(marks) else now
+        spans[phase] = (start, max(end - start, 0.0))
+    _TRACER.record(RoundEvent(source=source, ts=ts, dur=dur,
+                              spans=spans, ops=dict(ops or {}),
+                              stats=scal))
+
+
+def record_event(source: str, stats: dict | None = None, *,
+                 t_start: float | None = None,
+                 ops: dict | None = None) -> None:
+    """Trace-only event (no ``engine.rounds`` side effect) — for host
+    steps that wrap already-recorded rounds, e.g. one
+    ``migration_step`` batch or a benchmark iteration."""
+    if not metrics.enabled():
+        return
+    now = time.perf_counter()
+    ts = t_start if t_start is not None else now
+    _TRACER.record(RoundEvent(
+        source=source, ts=ts, dur=max(now - ts, 0.0), spans={},
+        ops=dict(ops or {}), stats=_scalarize(stats or {})))
+
+
+def count_traced_rounds(fn, *args) -> int:
+    """Collective data rounds in ONE traced execution of ``fn(*args)``.
+
+    Traces a fresh lambda through ``jax.make_jaxpr`` — the wrapper is a
+    new callable every call, so jit's trace cache cannot elide the trace
+    — and counts ``routing.dispatch`` invocations during it.  This is
+    the supported replacement for the PR 3 ``round_count`` global, which
+    a warm trace cache silently froze at zero."""
+    import jax
+
+    prev = metrics.set_enabled(True)
+    try:
+        with metrics.counting() as c:
+            jax.make_jaxpr(lambda *a: fn(*a))(*args)
+    finally:
+        metrics.set_enabled(prev)
+    return c.delta

@@ -5,3 +5,7 @@ import sys
 # single real CPU device; multi-device tests spawn subprocesses that set
 # --xla_force_host_platform_device_count themselves.
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# The round-counting assertions (obs.counting) require a live telemetry
+# substrate; shed an inherited kill switch before repro.obs is imported.
+os.environ.pop("OBS_DISABLED", None)

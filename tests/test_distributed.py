@@ -196,6 +196,47 @@ def test_sharded_l1_locality_tier_parity_and_elision():
     """))
 
 
+def test_sharded_telemetry_parity_and_merge():
+    """DESIGN.md §10 on the shard_map backend: the wrapper-side flush
+    must agree bit-for-bit with the stats the caller saw, keep counting
+    across jit-cache-hit calls (the PR 3 failure mode), and per-process
+    snapshots must merge additively."""
+    print(_run("""
+        import json
+        import jax, jax.numpy as jnp, numpy as np
+        from repro import obs
+        from repro.core import DHTConfig
+        from repro.core.distributed import ShardedDHT
+
+        mesh = jax.make_mesh((8,), ("dht",))
+        rng = np.random.default_rng(5)
+        keys = jnp.asarray(rng.integers(0, 2**31, size=(256, 20)), jnp.uint32)
+        vals = jnp.asarray(rng.integers(0, 2**31, size=(256, 26)), jnp.uint32)
+        d = ShardedDHT.create(mesh, DHTConfig(
+            n_shards=8, buckets_per_shard=512, capacity=64))
+        ws = d.write(keys, vals)
+        out, found, r1 = d.read(keys)
+        out, found, r2 = d.read(keys)   # jit cache hit — must still count
+        assert bool(found.all())
+        snap = d.telemetry_snapshot()
+        c = snap["counters"]
+        assert c["engine.rounds"] == 3, c
+        assert c["engine.wire_words"] == (int(ws["wire_words"])
+                                          + int(r1["wire_words"])
+                                          + int(r2["wire_words"])), c
+        assert c["dht.hits"] == int(r1["hits"]) + int(r2["hits"]), c
+        assert c["engine.ops.write"] == 256 and c["engine.ops.read"] == 512
+        assert snap["histograms"]["engine.round_latency_us"]["count"] == 3
+        # cross-process aggregation: counters/histograms add
+        merged = obs.merge_snapshots([snap, snap])
+        assert merged["counters"]["engine.rounds"] == 6
+        assert merged["histograms"]["engine.fill_frac"]["count"] == (
+            2 * snap["histograms"]["engine.fill_frac"]["count"])
+        json.dumps(snap)  # snapshot must be plain-JSON serializable
+        print("sharded telemetry OK")
+    """))
+
+
 def test_sharded_train_step_matches_single_device():
     """The same train step on a 1-device and a 4-device mesh must produce
     allclose losses — the distribution is semantics-preserving."""

@@ -31,7 +31,7 @@ from repro.core import (
     ring_resize,
     surrogate_create,
 )
-from repro.core import routing
+from repro import obs
 from repro.core.dht import _dht_read_dual_seq
 from repro.core.layout import MODES
 
@@ -61,12 +61,12 @@ def test_wrapper_single_round(mode):
     cfg = DHTConfig(n_shards=4, buckets_per_shard=512, mode=mode)
     st = dht_create(cfg)
     keys, vals = _kv(64)
-    routing.reset_round_count()
-    st, _ = dht_write(st, keys, vals)
-    assert routing.round_count() == 1
-    routing.reset_round_count()
-    st, _, _, _ = dht_read(st, keys)
-    assert routing.round_count() == 1
+    with obs.counting() as c:
+        st, _ = dht_write(st, keys, vals)
+    assert c.delta == 1
+    with obs.counting() as c:
+        st, _, _, _ = dht_read(st, keys)
+    assert c.delta == 1
 
 
 def test_mixed_batch_equals_sequential_snapshot(mode):
@@ -87,10 +87,10 @@ def test_mixed_batch_equals_sequential_snapshot(mode):
     ops = mixed_ops(op, jnp.concatenate([some_k, new_k]),
                     jnp.concatenate([jnp.zeros((some_k.shape[0], VW),
                                                jnp.uint32), new_v]))
-    routing.reset_round_count()
-    st_a, _, val_a, found_a, code_a, _ = dht_execute(
-        st0, ops, kinds=("read", "write"))
-    assert routing.round_count() == 1
+    with obs.counting() as c:
+        st_a, _, val_a, found_a, code_a, _ = dht_execute(
+            st0, ops, kinds=("read", "write"))
+    assert c.delta == 1
 
     # reference: sequential wrappers on the snapshot
     st_b, val_b, found_b, _ = dht_read(st0, some_k)
@@ -116,10 +116,10 @@ def test_migrate_op_equals_read_then_write_if_absent(mode):
     mk = jnp.concatenate([keys[:32], fresh_k[:32]])
     mv = jnp.concatenate([vals[:32] + 11, fresh_v[:32]])  # stale vs fresh
 
-    routing.reset_round_count()
-    st_a, _, val_a, found_a, code_a, es = dht_execute(
-        st0, migrate_ops(mk, mv), kinds=("migrate",))
-    assert routing.round_count() == 1
+    with obs.counting() as c:
+        st_a, _, val_a, found_a, code_a, es = dht_execute(
+            st0, migrate_ops(mk, mv), kinds=("migrate",))
+    assert c.delta == 1
 
     st_b, val_b, found_b, _ = dht_read(st0, mk)
     st_b, ws = dht_write(st_b, mk, mv, valid=~found_b)
@@ -145,14 +145,15 @@ def test_dual_epoch_one_round_mid_migration(mode):
     mig, _ = migration_step(mig)          # partially moved: both epochs live
     assert not mig.done
 
-    routing.reset_round_count()
-    new_a, old_a, val_a, found_a, s_a = dht_read_dual(mig.new, mig.old, keys)
-    assert routing.round_count() == 1, "dual read must be one dispatch"
+    with obs.counting() as c:
+        new_a, old_a, val_a, found_a, s_a = dht_read_dual(
+            mig.new, mig.old, keys)
+    assert c.delta == 1, "dual read must be one dispatch"
 
-    routing.reset_round_count()
-    new_b, old_b, val_b, found_b, s_b = _dht_read_dual_seq(
-        mig.new, mig.old, keys, jnp.ones((256,), bool))
-    assert routing.round_count() == 2
+    with obs.counting() as c:
+        new_b, old_b, val_b, found_b, s_b = _dht_read_dual_seq(
+            mig.new, mig.old, keys, jnp.ones((256,), bool))
+    assert c.delta == 2
 
     assert bool(found_a.all())
     np.testing.assert_array_equal(np.asarray(val_a), np.asarray(val_b))
@@ -164,9 +165,9 @@ def test_dual_epoch_one_round_mid_migration(mode):
 
     # multi-key dual: still one dispatch for the whole (n, m) fan-out
     many = keys.reshape(64, 4, KW)
-    routing.reset_round_count()
-    _, _, v, f, _ = dht_read_many_dual(mig.new, mig.old, many)
-    assert routing.round_count() == 1
+    with obs.counting() as c:
+        _, _, v, f, _ = dht_read_many_dual(mig.new, mig.old, many)
+    assert c.delta == 1
     assert bool(f.all())
     np.testing.assert_array_equal(
         np.asarray(v.reshape(256, VW)), np.asarray(vals))
@@ -189,11 +190,11 @@ def test_lookup_or_compute_traced_single_round_matches_host():
 
     st_h, out_h, found_h, s_h = lookup_or_compute(scfg, st_h, x, compute)
 
-    routing.reset_round_count()
-    jitted = jax.jit(
-        lambda s, v: lookup_or_compute(scfg, s, v, compute))
-    st_t, out_t, found_t, s_t = jitted(st_t, x)
-    assert routing.round_count() == 1, "traced path must be one round"
+    with obs.counting() as c:
+        jitted = jax.jit(
+            lambda s, v: lookup_or_compute(scfg, s, v, compute))
+        st_t, out_t, found_t, s_t = jitted(st_t, x)
+    assert c.delta == 1, "traced path must be one round"
 
     np.testing.assert_array_equal(np.asarray(out_h), np.asarray(out_t))
     np.testing.assert_array_equal(np.asarray(found_h), np.asarray(found_t))
@@ -210,10 +211,10 @@ def test_engine_wire_accounting_mixed_round():
     st = dht_create(cfg)
     keys, vals = _kv(256)
     op = jnp.where(jnp.arange(256) % 2 == 0, OP_READ, OP_WRITE)
-    routing.reset_round_count()
-    st, _, _, _, _, es = dht_execute(
-        st, mixed_ops(op, keys, vals), kinds=("read", "write"))
-    assert routing.round_count() == 1
+    with obs.counting() as c:
+        st, _, _, _, _, es = dht_execute(
+            st, mixed_ops(op, keys, vals), kinds=("read", "write"))
+    assert c.delta == 1
     # send: base + keys + vals + op + valid; reply: vals + found + code;
     # plus the count-exchange prologue's histogram words (S counters each
     # way — satellite: every word on the wire is accounted)
@@ -274,11 +275,12 @@ def test_lookup_interpolate_or_compute_traced_one_mixed_round():
     st_h, out_h, prov_h, s_h = lookup_interpolate_or_compute(
         scfg, st_h, x, compute, icfg)
 
-    routing.reset_round_count()
-    jitted = jax.jit(
-        lambda s, v: lookup_interpolate_or_compute(scfg, s, v, compute, icfg))
-    st_t, out_t, prov_t, s_t = jitted(st_t, x)
-    assert routing.round_count() == 1, "traced path must be one mixed round"
+    with obs.counting() as c:
+        jitted = jax.jit(
+            lambda s, v: lookup_interpolate_or_compute(
+                scfg, s, v, compute, icfg))
+        st_t, out_t, prov_t, s_t = jitted(st_t, x)
+    assert c.delta == 1, "traced path must be one mixed round"
 
     np.testing.assert_array_equal(np.asarray(prov_h), np.asarray(prov_t))
     np.testing.assert_array_equal(np.asarray(out_h), np.asarray(out_t))

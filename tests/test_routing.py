@@ -5,6 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import obs
 from repro.core import DHTConfig, dht_create, dht_read, dht_write, routing
 
 
@@ -174,12 +175,13 @@ def test_count_exchange_is_not_a_data_round():
     """The capacity prologue must not touch the collective-round counter
     (DESIGN.md §3/§8: it moves S counters, not payloads)."""
     dest = _dests("uniform", 256, 8, seed=3)
-    routing.reset_round_count()
-    cap = routing.plan_capacity(dest, 8)
-    b = routing.bin_by_dest(dest, 8, cap)
-    assert routing.round_count() == 0
-    routing.dispatch(b, [jnp.arange(256, dtype=jnp.int32)], None)
-    assert routing.round_count() == 1
+    with obs.counting() as c:
+        cap = routing.plan_capacity(dest, 8)
+        b = routing.bin_by_dest(dest, 8, cap)
+    assert c.delta == 0
+    with obs.counting() as c:
+        routing.dispatch(b, [jnp.arange(256, dtype=jnp.int32)], None)
+    assert c.delta == 1
 
 
 def test_eager_dht_ops_use_tight_capacity_and_report_wire():
