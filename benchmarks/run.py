@@ -11,10 +11,24 @@ per-round ring buffer as JSONL / perfetto-loadable ``trace_event`` JSON.
 """
 import argparse
 import dataclasses
+import hashlib
 import json
 import sys
 import time
 import traceback
+
+# BENCH json schema (bumped when the payload shape changes): v2 added the
+# "schema" header (version, config fingerprint, repeat count) and the
+# optional "repeats_raw" block that obs/regress.py's median-of-k uses
+SCHEMA_VERSION = 2
+
+
+def _fingerprint(config: dict) -> str:
+    """Short stable hash of the run configuration — trajectory tooling
+    refuses to compare BENCH files with different fingerprints (a quick
+    run regressing against a --full baseline is noise, not signal)."""
+    blob = json.dumps(config, sort_keys=True).encode()
+    return hashlib.sha256(blob).hexdigest()[:12]
 
 
 def main() -> None:
@@ -29,8 +43,13 @@ def main() -> None:
                     help="write the per-round trace ring as JSONL")
     ap.add_argument("--chrome-trace", default=None, metavar="PATH",
                     help="write the trace as Chrome trace_event JSON")
+    ap.add_argument("--repeats", type=int, default=1, metavar="N",
+                    help="run each bench N times; repeat 0 keeps the "
+                         "BENCH_<name> rows, all repeats land in "
+                         "repeats_raw for noise-aware regression gating")
     args = ap.parse_args()
     quick = not args.full
+    repeats = max(args.repeats, 1)
 
     from repro import obs
 
@@ -44,6 +63,7 @@ def main() -> None:
         bench_l1_locality,
         bench_resharding,
         bench_roofline,
+        bench_scale_model,
         bench_table2_mismatch,
         bench_value_sizes,
     )
@@ -60,11 +80,13 @@ def main() -> None:
         "interp": bench_interp,
         "reshard": bench_resharding,
         "roofline": bench_roofline,
+        "scale": bench_scale_model,
     }
     selected = (args.only.split(",") if args.only else list(benches))
 
     print("name,us_per_call,derived")
     results: dict[str, list[dict]] = {}
+    repeats_raw: dict[str, list[list[dict]]] = {}
     failures = 0
     for name in [n for n in selected if n not in benches]:
         failures += 1
@@ -75,12 +97,16 @@ def main() -> None:
         mod = benches[name]
         t0 = time.perf_counter()
         try:
-            rows = mod.run(quick)
-            if name == "fig45":
-                rows = rows + mod.table1(rows)
-            for r in rows:
-                print(r.csv())
-            results[f"BENCH_{name}"] = [dataclasses.asdict(r) for r in rows]
+            for rep in range(repeats):
+                rows = mod.run(quick)
+                if name == "fig45":
+                    rows = rows + mod.table1(rows)
+                dicts = [dataclasses.asdict(r) for r in rows]
+                if rep == 0:
+                    for r in rows:
+                        print(r.csv())
+                    results[f"BENCH_{name}"] = dicts
+                repeats_raw.setdefault(name, []).append(dicts)
         except Exception as e:
             failures += 1
             print(f"{name},NaN,ERROR:{type(e).__name__}:{e}")
@@ -91,8 +117,16 @@ def main() -> None:
         print(f"# {name} done in {time.perf_counter() - t0:.1f}s",
               file=sys.stderr)
     if args.json:
-        payload = {"failures": failures, "quick": quick,
+        config = {"quick": quick, "benches": sorted(selected),
+                  "repeats": repeats}
+        payload = {"schema": {"schema_version": SCHEMA_VERSION,
+                              "fingerprint": _fingerprint(config),
+                              "config": config,
+                              "repeats": repeats},
+                   "failures": failures, "quick": quick,
                    "telemetry": obs.get_registry().snapshot(), **results}
+        if repeats > 1:
+            payload["repeats_raw"] = repeats_raw
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2)
         print(f"# wrote {args.json}", file=sys.stderr)

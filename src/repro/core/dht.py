@@ -96,6 +96,10 @@ def dht_write(
         "epoch": es["epoch"],
         "wire_words": es["wire_words"],
         "fill_frac": es["fill_frac"],
+        "bin_counts": es["bin_counts"],
+        "bin_max_load": es["bin_max_load"],
+        "bin_imbalance": es["bin_imbalance"],
+        "hot_frac": es["hot_frac"],
         "code": code,
     }
     if l1_meta:
@@ -130,6 +134,10 @@ def dht_read(
         "epoch": es["epoch"],
         "wire_words": es["wire_words"],
         "fill_frac": es["fill_frac"],
+        "bin_counts": es["bin_counts"],
+        "bin_max_load": es["bin_max_load"],
+        "bin_imbalance": es["bin_imbalance"],
+        "hot_frac": es["hot_frac"],
     }
     if l1_meta:
         stats["wmark_post"] = es["wmark_post"]
@@ -202,6 +210,10 @@ def dht_read_cached(
         "epoch": es["epoch"],
         "wire_words": es["wire_words"],
         "fill_frac": es["fill_frac"],
+        "bin_counts": es["bin_counts"],
+        "bin_max_load": es["bin_max_load"],
+        "bin_imbalance": es["bin_imbalance"],
+        "hot_frac": es["hot_frac"],
     }
     # L1 front-end telemetry (host flush; the residue round recorded
     # itself inside dht_execute).  Sharded calls are traced — their
@@ -299,6 +311,16 @@ def _dht_read_dual_seq(
     # (large) padding fraction must not count as if it moved as many
     # words as the first
     wire = obs_metrics.merge_wire_stats(s_new, s_old)
+    # skew over BOTH rounds' wire bins: recompute the derived ratios from
+    # the summed per-destination counts rather than averaging the rounds'
+    # (mid-migration the epochs have different shard counts — shard ids
+    # are stable, so zero-pad the smaller epoch's histogram)
+    bc_n, bc_o = s_new["bin_counts"], s_old["bin_counts"]
+    width = max(bc_n.shape[0], bc_o.shape[0])
+    bc = (jnp.zeros(width, bc_n.dtype).at[:bc_n.shape[0]].add(bc_n)
+          .at[:bc_o.shape[0]].add(bc_o))
+    btot = jnp.maximum(jnp.sum(bc), 1).astype(jnp.float32)
+    bmax = jnp.max(bc).astype(jnp.float32)
     stats = {
         "hits": (s_new["hits"] + s_old["hits"]).astype(jnp.int32),
         "misses": jnp.sum(valid & ~found).astype(jnp.int32),
@@ -308,6 +330,11 @@ def _dht_read_dual_seq(
         "epoch": s_new["epoch"],
         "wire_words": wire["wire_words"],
         "fill_frac": wire["fill_frac"],
+        "bin_counts": bc,
+        "bin_max_load": jnp.max(bc).astype(jnp.int32),
+        "bin_imbalance": (bmax * jnp.float32(bc.shape[0]) / btot
+                          ).astype(jnp.float32),
+        "hot_frac": (bmax / btot).astype(jnp.float32),
         "hits_old_epoch": s_old["hits"],
     }
     return state, prev, vals, found, stats
@@ -368,6 +395,10 @@ def dht_read_dual(
         "epoch": es["epoch"],
         "wire_words": es["wire_words"],
         "fill_frac": es["fill_frac"],
+        "bin_counts": es["bin_counts"],
+        "bin_max_load": es["bin_max_load"],
+        "bin_imbalance": es["bin_imbalance"],
+        "hot_frac": es["hot_frac"],
         "hits_old_epoch": jnp.sum(fnd2[:, 1] & ~fnd2[:, 0]).astype(jnp.int32),
     }
     return state, prev, vals, fnd, stats

@@ -33,14 +33,21 @@ def shard_spec(mesh: Mesh) -> P:
     return P(mesh_axes(mesh))
 
 
+# Per-round skew lanes (DESIGN.md §11) every wrapper's stats carry; the
+# specs below append these so the shard_map out_specs stay in lockstep
+# with the dicts the dht.py wrappers return.
+SKEW_KEYS = ("bin_counts", "bin_max_load", "bin_imbalance", "hot_frac")
+
+
 def _psum_stats(stats: dict, axes) -> dict:
     out = {}
     for k, v in stats.items():
         if k == "code":
             out[k] = v  # per-item, stays sharded
-        elif k in ("rounds", "epoch", "dispatch_rounds"):
-            out[k] = jax.lax.pmax(v, axes)  # replicated/uniform scalars
-        elif k == "fill_frac":
+        elif k in ("rounds", "epoch", "dispatch_rounds", "n_shards",
+                   "capacity", "bin_max_load"):
+            out[k] = jax.lax.pmax(v, axes)  # replicated/uniform or max
+        elif k in ("fill_frac", "bin_imbalance", "hot_frac"):
             out[k] = jax.lax.pmean(v, axes)  # per-device fraction -> mean
         else:
             out[k] = jax.lax.psum(v, axes)
@@ -148,7 +155,8 @@ class ShardedDHT:
         stats_spec = {k: (batch_spec if k == "code" else P())
                       for k in ("inserted", "updated", "evicted", "dropped",
                                 "rounds", "lock_tokens", "epoch",
-                                "wire_words", "fill_frac", "code")}
+                                "wire_words", "fill_frac", "code")
+                      + SKEW_KEYS}
         return jax.jit(
             shard_map(
                 fn, mesh=self.mesh,
@@ -167,7 +175,8 @@ class ShardedDHT:
 
         stats_spec = {k: P() for k in
                       ("hits", "misses", "mismatches", "dropped",
-                       "lock_tokens", "epoch", "wire_words", "fill_frac")}
+                       "lock_tokens", "epoch", "wire_words", "fill_frac")
+                      + SKEW_KEYS}
         return jax.jit(
             shard_map(
                 fn, mesh=self.mesh,
@@ -203,7 +212,8 @@ class ShardedDHT:
         stats_spec = {k: P() for k in
                       ("mismatches", "rounds", "lock_tokens", "dropped",
                        "epoch", "wire_words", "wire_send_words",
-                       "wire_reply_words", "fill_frac", "dispatch_rounds")}
+                       "wire_reply_words", "fill_frac", "dispatch_rounds",
+                       "n_shards", "capacity") + SKEW_KEYS}
         return jax.jit(
             shard_map(
                 fn, mesh=self.mesh,
@@ -225,7 +235,8 @@ class ShardedDHT:
 
         stats_spec = {k: P() for k in
                       ("hits", "misses", "mismatches", "dropped",
-                       "lock_tokens", "epoch", "wire_words", "fill_frac")}
+                       "lock_tokens", "epoch", "wire_words", "fill_frac")
+                      + SKEW_KEYS}
         return jax.jit(
             shard_map(
                 fn, mesh=self.mesh,
@@ -255,7 +266,8 @@ class ShardedDHT:
 
         stats_spec = {k: P() for k in
                       ("hits", "misses", "l1_hits", "mismatches", "dropped",
-                       "lock_tokens", "epoch", "wire_words", "fill_frac")}
+                       "lock_tokens", "epoch", "wire_words", "fill_frac")
+                      + SKEW_KEYS}
         return jax.jit(
             shard_map(
                 fn, mesh=self.mesh,
@@ -284,7 +296,8 @@ class ShardedDHT:
         stats_spec = {k: (batch_spec if k == "code" else P())
                       for k in ("inserted", "updated", "evicted", "dropped",
                                 "rounds", "lock_tokens", "epoch",
-                                "wire_words", "fill_frac", "code")}
+                                "wire_words", "fill_frac", "code")
+                      + SKEW_KEYS}
         return jax.jit(
             shard_map(
                 fn, mesh=self.mesh,
@@ -311,7 +324,8 @@ class ShardedDHT:
 
         stats_spec = {k: P() for k in
                       ("hits", "misses", "mismatches", "dropped",
-                       "lock_tokens", "epoch", "wire_words", "fill_frac")}
+                       "lock_tokens", "epoch", "wire_words", "fill_frac")
+                      + SKEW_KEYS}
         return jax.jit(
             shard_map(
                 fn, mesh=self.mesh,

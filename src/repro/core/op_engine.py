@@ -650,8 +650,14 @@ def dht_execute(
     if prev is not None:
         payloads.append(ops.esel.astype(jnp.int32))
     payloads.append(payload_valid)
+    if rec:
+        # OBS_FENCE=1: block on each phase's products before the next
+        # mark so spans measure device time, not async issue time
+        obs_trace.fence(binned.pos, binned.kept, payloads)
     t_dispatch = time.perf_counter() if rec else 0.0
     inc = routing.dispatch(binned, payloads, axis_name)
+    if rec:
+        obs_trace.fence(inc)
     t_apply = time.perf_counter() if rec else 0.0
 
     def _unpack(parts):
@@ -701,6 +707,8 @@ def dht_execute(
          gen, wpre, wpost) = out
         n_mm, tok = jnp.sum(n_mm), jnp.sum(tok)
         rounds = jnp.max(rounds)
+        if rec:
+            obs_trace.fence(val, found, code)
         t_collect = time.perf_counter() if rec else 0.0
         coll = routing.collect(
             binned, _replies(val, found, code, gen, wpre, wpost), None,
@@ -756,6 +764,15 @@ def dht_execute(
         cfg.val_words + 2 + (3 if l1_meta else 0),
         prologue_words=2 * cfg.n_shards if used_prologue else 0,
         n_self_rows=binned.capacity if elide else 0)
+    # per-round skew lanes (DESIGN.md §11): the per-destination histogram
+    # of what this round puts on the wire, reduced to scalar diagnostics
+    # that ride the trace — imbalance = max/mean bin load, hot_frac = the
+    # hottest shard's share of the routed traffic.  The full (S,) counts
+    # vector is returned too for host-side consumers (obs/skew.py); it is
+    # skipped by the scalar trace flush.
+    bcounts = routing.bin_counts(binned)
+    btotal = jnp.maximum(jnp.sum(bcounts), 1).astype(jnp.float32)
+    bmax = jnp.max(bcounts).astype(jnp.float32)
     estats = {
         "mismatches": n_mm.astype(jnp.int32),
         "rounds": rounds.astype(jnp.int32),
@@ -769,6 +786,15 @@ def dht_execute(
         # one dispatch/collect cycle per execute — the host-side flush
         # advances engine.rounds by this lane (pmax'd across shards)
         "dispatch_rounds": jnp.int32(1),
+        # static round geometry, stamped so trace events are self-
+        # describing (the cost model fits on these, obs/costmodel.py)
+        "n_shards": jnp.int32(cfg.n_shards),
+        "capacity": jnp.int32(binned.capacity),
+        "bin_counts": bcounts,
+        "bin_max_load": jnp.max(bcounts).astype(jnp.int32),
+        "bin_imbalance": (bmax * jnp.float32(cfg.n_shards)
+                          / btotal).astype(jnp.float32),
+        "hot_frac": (bmax / btotal).astype(jnp.float32),
     }
     if l1_meta:
         estats["bucket_gen"] = gen_out.astype(jnp.uint32)

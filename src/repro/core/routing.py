@@ -161,6 +161,18 @@ def bin_by_dest(
     )
 
 
+def bin_counts(b: Binned) -> jnp.ndarray:
+    """Per-destination count of *kept* items, (n_dest,) int32 — the raw
+    material of the skew diagnostics (DESIGN.md §11).  Counts the items
+    this round actually puts on the wire: overflowed, invalid, and
+    elided (self-served / L1-hit) items take no bin slot, so they do not
+    appear here either — the histogram describes the send buffers, not
+    the request batch.  jit-safe (one scatter-add)."""
+    return jnp.zeros((b.n_dest,), jnp.int32).at[
+        jnp.where(b.kept, b.dest, b.n_dest)
+    ].add(1, mode="drop")
+
+
 def bin_by_dest_onehot(
     dest: jnp.ndarray, n_dest: int, capacity: int, epoch=None, valid=None
 ) -> Binned:

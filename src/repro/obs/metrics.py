@@ -34,7 +34,7 @@ __all__ = [
     "enabled", "set_enabled", "disabled", "inc", "observe", "set_gauge",
     "counter_value", "counting", "merge_wire_stats", "merge_snapshots",
     "histogram_quantile", "LATENCY_EDGES_US", "FRACTION_EDGES",
-    "SIZE_EDGES",
+    "SIZE_EDGES", "RATIO_EDGES",
 ]
 
 # Fixed bucket lattices.  Fixed edges are what make histogram merge a
@@ -44,6 +44,10 @@ LATENCY_EDGES_US: tuple[float, ...] = tuple(
     float(m * 10 ** e) for e in range(8) for m in (1, 2, 5))       # 1µs..50s
 FRACTION_EDGES: tuple[float, ...] = tuple(i / 20 for i in range(1, 21))
 SIZE_EDGES: tuple[float, ...] = tuple(float(1 << i) for i in range(25))
+# ratios >= 1 (imbalance max/mean, p99/p50): dense near 1, 1-2-5 above
+RATIO_EDGES: tuple[float, ...] = (
+    1.0, 1.1, 1.25, 1.5, 1.75, 2.0, 2.5, 3.0, 4.0, 5.0, 6.0, 8.0,
+    10.0, 16.0, 32.0, 64.0, 128.0, 256.0, 512.0, 1024.0)
 
 _ENABLED = os.environ.get("OBS_DISABLED", "0") not in ("1", "true", "yes")
 

@@ -10,6 +10,10 @@ Usage::
 its ``telemetry`` key) or a bare registry-snapshot JSON; multiple
 ``--bench`` files (e.g. one per shard process) are merged with
 :func:`repro.obs.metrics.merge_snapshots` before rendering.
+
+``--skew`` renders the imbalance view (DESIGN.md §11): the per-round
+``imb``/``hot`` columns aggregated over the trace plus the
+``engine.bin_imbalance``/``engine.hot_frac`` registry histograms.
 """
 from __future__ import annotations
 
@@ -81,6 +85,7 @@ def render_timeline(events: list[dict], last: int = 30) -> str:
         stats = e.get("stats", {})
         extras = []
         for key, label in (("wire_words", "wire"), ("fill_frac", "fill"),
+                           ("bin_imbalance", "imb"), ("hot_frac", "hot"),
                            ("l1_hits", "l1"), ("dropped", "drop")):
             if key in stats:
                 extras.append(f"{label}={_fmt_count(stats[key])}")
@@ -97,6 +102,54 @@ def render_timeline(events: list[dict], last: int = 30) -> str:
     return "\n".join(lines)
 
 
+def render_skew(events: list[dict] | None = None,
+                snap: dict | None = None) -> str:
+    """Imbalance view: trace-side skew lanes aggregated per source, plus
+    the registry's imbalance/hot-fraction histograms (DESIGN.md §11)."""
+    lines = ["== skew =="]
+    if events:
+        by_src: dict[str, list[dict]] = {}
+        for e in events:
+            s = e.get("stats", {})
+            if "bin_imbalance" in s or "hot_frac" in s:
+                by_src.setdefault(e.get("source", "?"), []).append(s)
+        if by_src:
+            lines.append("-- per-round wire-bin skew (trace) --")
+            lines.append(f"  {'source':<24} {'rounds':>6} {'imb(med)':>9} "
+                         f"{'imb(max)':>9} {'hot(med)':>9} {'maxload':>8}")
+            for src in sorted(by_src):
+                ss = by_src[src]
+                imbs = sorted(float(s.get("bin_imbalance", 1.0)) for s in ss)
+                hots = sorted(float(s.get("hot_frac", 0.0)) for s in ss)
+                loads = [int(s.get("bin_max_load", 0)) for s in ss]
+                mid = len(ss) // 2
+                lines.append(
+                    f"  {src:<24} {len(ss):>6} {imbs[mid]:>9.2f} "
+                    f"{imbs[-1]:>9.2f} {hots[mid]:>9.3f} {max(loads):>8}")
+        else:
+            lines.append("  (no skew lanes in trace)")
+    hists = (snap or {}).get("histograms", {})
+    shown = False
+    for name in ("engine.bin_imbalance", "engine.hot_frac",
+                 "l1.set_occupancy", "dht.bucket_occupancy"):
+        h = hists.get(name)
+        if not h or not h.get("count"):
+            continue
+        if not shown:
+            lines.append("-- registry skew histograms --")
+            shown = True
+        n = int(h["count"])
+        mean = float(h["sum"]) / n if n else 0.0
+        lines.append(
+            f"  {name}: n={n} mean={mean:.3f} "
+            f"p50={metrics.histogram_quantile(h, 0.5):.3g} "
+            f"p99={metrics.histogram_quantile(h, 0.99):.3g} "
+            f"max={h.get('max')}")
+    if len(lines) == 1:
+        lines.append("  (no skew data)")
+    return "\n".join(lines)
+
+
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.obs.report", description=__doc__)
@@ -107,15 +160,24 @@ def main(argv: list[str] | None = None) -> int:
                     help="top-N counters to show")
     ap.add_argument("--last", type=int, default=30,
                     help="last-N trace events to show")
+    ap.add_argument("--skew", action="store_true",
+                    help="render the imbalance view (DESIGN.md §11)")
     args = ap.parse_args(argv)
     if not args.bench and not args.trace:
         ap.error("need --bench and/or --trace")
+    events = None
     if args.trace:
         with open(args.trace) as f:
             events = [json.loads(line) for line in f if line.strip()]
-        print(render_timeline(events, last=args.last))
+    snap = None
     if args.bench:
         snap = metrics.merge_snapshots(load_snapshot(p) for p in args.bench)
+    if args.skew:
+        print(render_skew(events, snap))
+        return 0
+    if events is not None:
+        print(render_timeline(events, last=args.last))
+    if snap is not None:
         print(render_summary(snap, top=args.top))
     return 0
 

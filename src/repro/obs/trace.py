@@ -22,6 +22,17 @@ stat lanes ride the return value and the *caller's* host code (e.g. the
 ``perf_counter`` marks around the engine's issue points; the event's
 total ``dur`` is measured *after* the stat lanes are fetched, so it
 includes the device work those scalars depend on.
+
+Phase-span caveat (and the ``OBS_FENCE=1`` switch): JAX dispatch is
+asynchronous, so by default a phase span measures the host time to
+*issue* that phase's work, not the device time to run it — the un-issued
+remainder piles into whichever phase happens to force a value (usually
+the final ``dur``, which fetches the stat lanes).  Setting ``OBS_FENCE=1``
+in the environment (or :func:`set_fence`) makes the engine
+``block_until_ready`` on each phase's products before taking the next
+mark, so spans measure device time — at the cost of serializing the
+pipeline, which perturbs the very timing being measured.  The default is
+therefore non-perturbing; fence only when reading phase breakdowns.
 """
 from __future__ import annotations
 
@@ -35,9 +46,35 @@ from typing import Sequence
 from . import metrics
 
 __all__ = ["RoundEvent", "TraceRecorder", "get_tracer", "record_round",
-           "record_event", "count_traced_rounds", "PHASES"]
+           "record_event", "count_traced_rounds", "PHASES",
+           "fence_enabled", "set_fence", "fence"]
 
 PHASES = ("bin", "dispatch", "apply", "collect")
+
+_FENCE = os.environ.get("OBS_FENCE", "0") in ("1", "true", "yes")
+
+
+def fence_enabled() -> bool:
+    """Are phase marks fenced with ``block_until_ready``?
+    (``OBS_FENCE=1`` starts it on; default off = non-perturbing.)"""
+    return _FENCE
+
+
+def set_fence(on: bool) -> bool:
+    """Toggle phase fencing; returns the previous state (for restore)."""
+    global _FENCE
+    prev, _FENCE = _FENCE, bool(on)
+    return prev
+
+
+def fence(*values) -> None:
+    """Barrier before a phase mark: when fencing is on, block until the
+    given arrays (the previous phase's products) are device-complete, so
+    the span measures device time rather than async issue time."""
+    if _FENCE:
+        import jax
+
+        jax.block_until_ready(values)
 
 # estats lanes -> registry counters (plain additive flush).
 _COUNTER_LANES = {
@@ -161,7 +198,8 @@ def _scalarize(stats: dict) -> dict:
 
 def record_round(source: str, stats: dict, *, ops: dict | None = None,
                  t_start: float | None = None,
-                 phase_marks: Sequence[tuple[str, float]] = ()) -> None:
+                 phase_marks: Sequence[tuple[str, float]] = (),
+                 dur: float | None = None) -> None:
     """Flush one executed round: trace event + registry accumulation.
 
     ``stats`` is the round's stat-lane dict (jax scalars fine — fetched
@@ -169,13 +207,18 @@ def record_round(source: str, stats: dict, *, ops: dict | None = None,
     order; each phase ends where the next begins, the last at record
     time.  ``engine.rounds`` advances by the round's ``dispatch_rounds``
     lane (default 1) — this is the host-side executed-round counter that
-    jit trace-caching cannot defeat."""
+    jit trace-caching cannot defeat.  ``dur`` overrides the measured
+    duration — for callers that timed the round externally (e.g. a
+    benchmark recording a median-of-k jitted call as one event)."""
     if not metrics.enabled():
         return
     scal = _scalarize(stats)
     now = time.perf_counter()
     ts = t_start if t_start is not None else now
-    dur = max(now - ts, 0.0) if t_start is not None else 0.0
+    if dur is None:
+        dur = max(now - ts, 0.0) if t_start is not None else 0.0
+    else:
+        dur = max(float(dur), 0.0)
 
     reg = metrics.get_registry()
     reg.inc("engine.rounds", int(scal.get("dispatch_rounds", 1)))
@@ -185,7 +228,15 @@ def record_round(source: str, stats: dict, *, ops: dict | None = None,
     if "fill_frac" in scal:
         reg.observe("engine.fill_frac", scal["fill_frac"],
                     edges=metrics.FRACTION_EDGES)
-    if t_start is not None:
+    # per-round skew lanes (DESIGN.md §11): bin-count imbalance and the
+    # hottest-shard traffic fraction ride every round's estats
+    if "bin_imbalance" in scal:
+        reg.observe("engine.bin_imbalance", scal["bin_imbalance"],
+                    edges=metrics.RATIO_EDGES)
+    if "hot_frac" in scal:
+        reg.observe("engine.hot_frac", scal["hot_frac"],
+                    edges=metrics.FRACTION_EDGES)
+    if t_start is not None or dur > 0.0:
         reg.observe("engine.round_latency_us", dur * 1e6,
                     edges=metrics.LATENCY_EDGES_US)
     total_ops = 0

@@ -78,7 +78,15 @@ def collective_bytes(hlo_text: str) -> dict[str, int]:
                 break
         if kind is None:
             continue
-        rest = line.split(m.group(2), 1)[1]
+        if op.endswith("-done"):
+            # async pair: the -start op carries the shapes; counting the
+            # -done half would double every async collective
+            continue
+        # slice from the regex match end — the op name usually ALSO
+        # appears in the instruction name (%all-to-all.4 = ...), so a
+        # split on the name would re-include the output tuple and
+        # double-count tuple-shaped collectives
+        rest = line[m.end(2):]
         out_bytes = _shape_bytes(ty)
         arg_bytes = _shape_bytes(rest)
         b = max(out_bytes, arg_bytes)

@@ -271,3 +271,34 @@ def test_record_round_flushes_lanes_and_spans(fresh_registry):
     assert ev.stats["wire_words"] == 640 and "wmarks" not in ev.stats
     assert ev.spans["bin"] == (0.0, 1.0)        # ends at next mark
     assert ev.spans["apply"][0] == 1.0          # last span ends at record
+
+
+def test_record_round_dur_override(fresh_registry):
+    # external timing (a bench's median-of-k) lands as the event's dur
+    # and in the latency histogram, even with no t_start
+    obs.record_round("unit.timed", {"wire_words": jnp.int32(8)},
+                     ops={"read": 4}, dur=2e-3)
+    ev = obs.get_tracer().events()[-1]
+    assert ev.dur == 2e-3
+    lat = fresh_registry.snapshot()["histograms"]["engine.round_latency_us"]
+    assert lat["count"] >= 1
+
+
+def test_fence_toggle_and_barrier(fresh_registry):
+    from repro.obs.trace import fence, fence_enabled, set_fence
+
+    prev = set_fence(True)
+    try:
+        assert fence_enabled()
+        fence(jnp.arange(4), [jnp.ones(2)])     # must not raise
+        # fenced eager round still records all four phase spans
+        cfg = DHTConfig(n_shards=2, buckets_per_shard=16, key_words=4,
+                        val_words=3)
+        state = dht_create(cfg)
+        keys = jnp.arange(32, dtype=jnp.uint32).reshape(8, 4)
+        state, _ = dht_write(state, keys, jnp.ones((8, 3), jnp.uint32))
+        ev = obs.get_tracer().events()[-1]
+        assert set(ev.spans) == {"bin", "dispatch", "apply", "collect"}
+    finally:
+        set_fence(prev)
+    assert fence_enabled() == prev

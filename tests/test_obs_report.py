@@ -1,0 +1,141 @@
+"""Renderer coverage for ``repro.obs.report`` (PR 7 satellite): the
+round-timeline, top-metrics, and skew views, including the
+empty-registry / empty-trace edge cases, plus the CLI entry point."""
+import json
+
+import pytest
+
+from repro.obs import metrics
+from repro.obs.metrics import MetricRegistry, set_registry
+from repro.obs.report import (load_snapshot, main, render_skew,
+                              render_summary, render_timeline)
+
+
+@pytest.fixture()
+def fresh_registry():
+    reg = MetricRegistry()
+    prev = set_registry(reg)
+    try:
+        yield reg
+    finally:
+        set_registry(prev)
+
+
+def _event(source="engine.read", dur=1e-3, stats=None, spans=None):
+    return {"source": source, "ts": 0.0, "dur": dur,
+            "spans": spans or {}, "ops": {"read": 64},
+            "stats": stats or {}}
+
+
+# ------------------------------------------------------------- summary
+def test_summary_empty_registry():
+    out = render_summary({})
+    assert "registry empty" in out
+
+
+def test_summary_renders_counters_gauges_histograms():
+    reg = MetricRegistry()
+    reg.inc("engine.rounds", 7)
+    reg.inc("engine.wire_words", 12345678)
+    reg.set_gauge("bench.l1_hit_frac.zipf", 0.875)
+    reg.observe("engine.round_latency_us", 120.0)
+    out = render_summary(reg.snapshot())
+    assert "engine.rounds" in out and "7" in out
+    assert "12.35M" in out          # human-scaled counter
+    assert "bench.l1_hit_frac.zipf" in out and "0.8750" in out
+    assert "engine.round_latency_us" in out and "n=1" in out
+
+
+def test_summary_top_n_limits_counters():
+    reg = MetricRegistry()
+    for i in range(30):
+        reg.inc(f"c.{i:02d}", 30 - i)
+    out = render_summary(reg.snapshot(), top=5)
+    assert "c.00" in out and "c.29" not in out
+
+
+# ------------------------------------------------------------ timeline
+def test_timeline_empty_trace():
+    out = render_timeline([])
+    assert "trace empty" in out
+
+
+def test_timeline_renders_stats_and_spans():
+    ev = _event(stats={"wire_words": 4096, "fill_frac": 0.25,
+                       "bin_imbalance": 1.75, "hot_frac": 0.2},
+                spans={"bin": [0.0, 2e-4], "dispatch": [2e-4, 3e-4],
+                       "apply": [5e-4, 4e-4], "collect": [9e-4, 1e-4]})
+    out = render_timeline([ev])
+    assert "engine.read" in out
+    assert "wire=4.10k" in out
+    assert "imb=1.75" in out        # per-round imbalance column
+    assert "hot=0.2" in out
+    assert "bin:20%" in out         # phase breakdown percentages
+
+
+def test_timeline_last_n():
+    evs = [_event(source=f"s{i}") for i in range(10)]
+    out = render_timeline(evs, last=3)
+    assert "s9" in out and "s0" not in out
+    assert "last 3 of 10" in out
+
+
+def test_timeline_zero_duration_event():
+    # dur=0 events (stats-only flushes) must render without div-by-zero
+    out = render_timeline([_event(dur=0.0)])
+    assert "engine.read" in out
+
+
+# ---------------------------------------------------------------- skew
+def test_skew_empty():
+    assert "no skew data" in render_skew(None, None)
+    assert "no skew lanes" in render_skew([_event()], None)
+
+
+def test_skew_aggregates_trace_lanes():
+    evs = [_event(stats={"bin_imbalance": 1.0 + i, "hot_frac": 0.1 * i,
+                         "bin_max_load": 10 * i}) for i in range(1, 4)]
+    out = render_skew(evs, None)
+    assert "engine.read" in out
+    assert "3" in out               # round count
+    assert "30" in out              # max bin_max_load
+
+
+def test_skew_renders_registry_histograms():
+    reg = MetricRegistry()
+    reg.observe("engine.bin_imbalance", 2.0, edges=metrics.RATIO_EDGES)
+    reg.observe("engine.hot_frac", 0.5, edges=metrics.FRACTION_EDGES)
+    out = render_skew(None, reg.snapshot())
+    assert "engine.bin_imbalance" in out and "engine.hot_frac" in out
+
+
+# ----------------------------------------------------------------- CLI
+def test_main_requires_input():
+    with pytest.raises(SystemExit):
+        main([])
+
+
+def test_main_end_to_end(tmp_path, capsys):
+    reg = MetricRegistry()
+    reg.inc("engine.rounds", 3)
+    bench = tmp_path / "BENCH.json"
+    bench.write_text(json.dumps({"telemetry": reg.snapshot()}))
+    trace = tmp_path / "trace.jsonl"
+    with open(trace, "w") as f:
+        f.write(json.dumps(_event(stats={"bin_imbalance": 2.0})) + "\n")
+    assert main(["--bench", str(bench), "--trace", str(trace)]) == 0
+    out = capsys.readouterr().out
+    assert "round timeline" in out and "metric registry" in out
+    assert main(["--bench", str(bench), "--trace", str(trace),
+                 "--skew"]) == 0
+    assert "skew" in capsys.readouterr().out
+
+
+def test_load_snapshot_accepts_bare_and_bench(tmp_path):
+    snap = {"counters": {"x": 1}, "gauges": {}, "histograms": {}}
+    bare = tmp_path / "snap.json"
+    bare.write_text(json.dumps(snap))
+    wrapped = tmp_path / "bench.json"
+    wrapped.write_text(json.dumps({"telemetry": snap, "failures": 0}))
+    assert load_snapshot(str(bare)) == snap
+    assert load_snapshot(str(wrapped)) == snap

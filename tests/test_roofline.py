@@ -1,0 +1,168 @@
+"""Pin `roofline/analysis.collective_bytes` — the HLO-text parser the
+cost-model wire-traffic cross-check depends on (DESIGN.md §11).
+
+Each test feeds a hand-written optimized-HLO snippet of one collective
+kind and asserts the byte accounting exactly.  The regression cases at
+the bottom pin two parser bugs: (a) instruction NAMES contain the op
+name (`%all-to-all.4 = ... all-to-all(...)`) — a split on the name
+re-included the output tuple and double-counted; (b) async `-start` /
+`-done` pairs must count once, not twice.
+"""
+import pytest
+
+from repro.roofline.analysis import collective_bytes
+
+
+def _total(coll):
+    return sum(v for k, v in coll.items() if not k.startswith("_"))
+
+
+def test_all_gather_simple():
+    hlo = """
+HloModule m
+
+ENTRY %main (p0: f32[8,128]) -> f32[32,128] {
+  %p0 = f32[8,128]{1,0} parameter(0)
+  ROOT %ag = f32[32,128]{1,0} all-gather(f32[8,128]{1,0} %p0), dimensions={0}
+}
+"""
+    coll = collective_bytes(hlo)
+    # output is the materialized traffic: 32*128*4 bytes
+    assert coll["all-gather"] == 32 * 128 * 4
+    assert coll["_counts"]["all-gather"] == 1
+    assert _total(coll) == coll["all-gather"]
+
+
+def test_all_reduce_output_equals_operand():
+    hlo = """
+  %ar = f32[1024]{0} all-reduce(f32[1024]{0} %x), to_apply=%add
+"""
+    coll = collective_bytes(hlo)
+    # max(out, args) with out == args: counted once
+    assert coll["all-reduce"] == 1024 * 4
+    assert coll["_counts"]["all-reduce"] == 1
+
+
+def test_reduce_scatter_counts_operand_side():
+    hlo = """
+  %rs = f32[256]{0} reduce-scatter(f32[1024]{0} %x), dimensions={0}
+"""
+    coll = collective_bytes(hlo)
+    # operand (1024) is the traffic, output is operand/shards — the
+    # conservative max picks the operand side
+    assert coll["reduce-scatter"] == 1024 * 4
+
+
+def test_all_to_all_tuple_shaped():
+    # shard_map lowers all_to_all over N devices to a tuple-shaped op:
+    # N operands in, N results out, one per peer
+    hlo = """
+  %all-to-all.4 = (u32[1,64,22]{2,1,0}, u32[1,64,22]{2,1,0}, u32[1,64,22]{2,1,0}, u32[1,64,22]{2,1,0}) all-to-all(u32[1,64,22]{2,1,0} %a, u32[1,64,22]{2,1,0} %b, u32[1,64,22]{2,1,0} %c, u32[1,64,22]{2,1,0} %d), replica_groups={{0,1,2,3}}
+"""
+    coll = collective_bytes(hlo)
+    # 4 blocks of 1*64*22 u32 each — output tuple == operand tuple, so
+    # the per-instruction max must equal ONE side, not their sum
+    assert coll["all-to-all"] == 4 * 64 * 22 * 4
+    assert coll["_counts"]["all-to-all"] == 1
+
+
+def test_name_containing_op_name_not_double_counted():
+    # regression: the instruction NAME (%all-reduce.7) contains the op
+    # name; the operand slice must start after the op token, not at the
+    # name's first occurrence
+    hlo = """
+  %all-reduce.7 = f32[512]{0} all-reduce(f32[512]{0} %x), to_apply=%add
+"""
+    coll = collective_bytes(hlo)
+    assert coll["all-reduce"] == 512 * 4
+
+
+def test_async_start_done_counted_once():
+    hlo = """
+  %all-gather-start.1 = (f32[8,16]{1,0}, f32[32,16]{1,0}) all-gather-start(f32[8,16]{1,0} %p), dimensions={0}
+  %all-gather-done.1 = f32[32,16]{1,0} all-gather-done((f32[8,16]{1,0}, f32[32,16]{1,0}) %all-gather-start.1)
+"""
+    coll = collective_bytes(hlo)
+    # the -start op carries both shapes; the -done half must be skipped
+    assert coll["_counts"]["all-gather"] == 1
+    assert coll["all-gather"] == (8 * 16 + 32 * 16) * 4
+
+
+def test_collective_permute_and_multiple_instructions_sum():
+    hlo = """
+  %cp = bf16[64,64]{1,0} collective-permute(bf16[64,64]{1,0} %x), source_target_pairs={{0,1},{1,0}}
+  %ar.1 = f32[16]{0} all-reduce(f32[16]{0} %y), to_apply=%add
+  %ar.2 = f32[16]{0} all-reduce(f32[16]{0} %z), to_apply=%add
+"""
+    coll = collective_bytes(hlo)
+    assert coll["collective-permute"] == 64 * 64 * 2
+    assert coll["all-reduce"] == 2 * 16 * 4
+    assert coll["_counts"]["all-reduce"] == 2
+
+
+def test_bf16_upcast_adjustment():
+    # CPU float-normalization wraps bf16 collectives in f32 converts:
+    # counted at half width, raw figure reported alongside
+    hlo = """
+  %ar = f32[128]{0} all-reduce(f32[128]{0} %convert.5), to_apply=%add
+"""
+    coll = collective_bytes(hlo)
+    assert coll["all-reduce"] == 128 * 4 // 2
+    assert coll["_raw_f32_upcast_bytes"] == 128 * 4
+
+
+def test_non_collective_lines_ignored():
+    hlo = """
+HloModule m
+  %add.1 = f32[128]{0} add(f32[128]{0} %a, f32[128]{0} %b)
+  %fusion = f32[128]{0} fusion(f32[128]{0} %c), kind=kLoop, calls=%fused
+  ROOT %tuple = (f32[128]{0}) tuple(f32[128]{0} %add.1)
+"""
+    coll = collective_bytes(hlo)
+    assert _total(coll) == 0
+    assert all(v == 0 for v in coll["_counts"].values())
+
+
+def test_empty_module():
+    coll = collective_bytes("")
+    assert _total(coll) == 0
+
+
+def test_parser_matches_real_compiled_alltoall():
+    """End-to-end: compile a genuine jax all_to_all over forced host
+    devices (subprocess — the main pytest process keeps the single real
+    CPU device) and check the parsed bytes equal the analytic buffer."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+
+    root = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = os.path.join(root, "src")
+    code = textwrap.dedent("""
+        import jax, jax.numpy as jnp
+        from jax.sharding import Mesh, PartitionSpec as P
+        from repro.core.compat import shard_map
+        from repro.roofline.analysis import collective_bytes
+
+        n = len(jax.devices())
+        assert n == 4, n
+        mesh = Mesh(jax.devices(), ("d",))
+        f = lambda x: jax.lax.all_to_all(x, "d", 0, 0, tiled=True)
+        sm = shard_map(f, mesh=mesh, in_specs=P("d"), out_specs=P("d"))
+        x = jnp.zeros((n * 8, 4), jnp.uint32)
+        hlo = jax.jit(sm).lower(x).compile().as_text()
+        coll = collective_bytes(hlo)
+        # the compiled module is per-device SPMD: the in_spec splits the
+        # leading dim over n devices, so the buffer is 8 rows x 4 u32
+        assert coll["all-to-all"] == 8 * 4 * 4, coll
+        assert coll["_counts"]["all-to-all"] >= 1, coll
+        print("ok")
+    """)
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=420)
+    assert out.returncode == 0, f"stderr:\n{out.stderr[-3000:]}"
+    assert "ok" in out.stdout
