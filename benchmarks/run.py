@@ -61,6 +61,7 @@ def main() -> None:
         bench_interp,
         bench_kernels,
         bench_l1_locality,
+        bench_pipeline,
         bench_resharding,
         bench_roofline,
         bench_scale_model,
@@ -77,6 +78,7 @@ def main() -> None:
         "valsize": bench_value_sizes,
         "kernels": bench_kernels,
         "l1": bench_l1_locality,
+        "pipeline": bench_pipeline,
         "interp": bench_interp,
         "reshard": bench_resharding,
         "roofline": bench_roofline,

@@ -34,6 +34,7 @@ from repro.core import (
     PROV_EXACT,
     PROV_MISS,
     SurrogateConfig,
+    lookup_or_compute_pipelined,
     lookup_or_interpolate,
 )
 from repro.core.layout import dht_create, pack_floats
@@ -70,6 +71,10 @@ class PoetConfig:
     interp_radius: int = 1
     interp_max_dist: float = 2.0
     interp_min_neighbors: int = 2
+    # pipelined issue/commit engine (DESIGN.md §12): probe the next
+    # read bucket while the solver chews on the previous bucket's misses
+    use_pipeline: bool = False
+    pipeline_depth: int = 2
 
 
 def initial_state(cfg: PoetConfig) -> jnp.ndarray:
@@ -248,6 +253,39 @@ def run_simulation(cfg: PoetConfig, use_dht: bool = True,
             out_u = np.zeros((nu, N_OUT), np.float32)
             found_np = np.zeros((nu,), bool)
             exact_np = np.zeros((nu,), bool)
+            if cfg.use_pipeline and not cfg.use_interp:
+                # pipelined driver (DESIGN.md §12): the read round for
+                # bucket B+1 is in flight while the solver computes
+                # bucket B's misses — the round latency hides behind the
+                # chemistry instead of adding to it
+                batches = [jnp.asarray(uniq_rows[lo:lo + READ_BUCKET])
+                           for lo in range(0, nu, READ_BUCKET)]
+
+                def chem_counted(x):
+                    nonlocal chem_calls
+                    chem_calls += int(x.shape[0])
+                    return chem(x)
+
+                table, outs, founds, _pstats = lookup_or_compute_pipelined(
+                    scfg, table, batches, chem_counted,
+                    depth=cfg.pipeline_depth)
+                out_u[:] = np.concatenate(
+                    [np.asarray(o) for o in outs], axis=0)
+                found_np[:] = np.concatenate(
+                    [np.asarray(f) for f in founds])
+                # forwarded rows count as exact hits, like the
+                # synchronous schedule they are bit-for-bit equal to
+                exact_np[:] = found_np
+                hits += int(found_np[inv].sum())
+                misses += int((~found_np[inv]).sum())
+                t_chem += time.perf_counter() - tc
+                state = jnp.asarray(out_u[inv])[:, :9]
+                if verbose and step % 10 == 0:
+                    print(f"step {step:4d} calcite "
+                          f"{float(state[:, CALCITE].mean()):.4f} dolomite "
+                          f"{float(state[:, DOLOMITE].mean()):.4f} "
+                          f"hits {hits} misses {misses}")
+                continue
             # fixed-size buckets -> a bounded set of compiled shapes;
             # result assembly stays on the host (numpy) — each un-jitted
             # device op costs more in dispatch than the whole assembly
@@ -323,11 +361,16 @@ def main():
     ap.add_argument("--interp", action="store_true",
                     help="resolve near-miss states by stencil interpolation "
                          "over cached lattice neighbors (DESIGN.md §6)")
+    ap.add_argument("--pipeline", action="store_true",
+                    help="pipelined issue/commit engine: probe the next "
+                         "read bucket while the solver computes the "
+                         "previous bucket's misses (DESIGN.md §12)")
     args = ap.parse_args()
 
-    cfg = PoetConfig(use_interp=args.interp)
+    cfg = PoetConfig(use_interp=args.interp, use_pipeline=args.pipeline)
     print(f"grid {cfg.nx}x{cfg.ny}, {cfg.n_steps} steps, "
-          f"sig_digits={cfg.sig_digits}, interp={cfg.use_interp}")
+          f"sig_digits={cfg.sig_digits}, interp={cfg.use_interp}, "
+          f"pipeline={cfg.use_pipeline}")
     ref = run_simulation(cfg, use_dht=False)
     print(f"reference (no DHT): {ref['wall_s']:.2f}s "
           f"({ref['chem_calls']} chemistry calls)")

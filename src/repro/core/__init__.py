@@ -14,6 +14,7 @@ from .layout import (  # noqa: F401
 )
 from .layout import with_ring  # noqa: F401
 from .dht import (  # noqa: F401
+    InFlightRound,
     OP_MIGRATE,
     OP_READ,
     OP_WRITE,
@@ -23,18 +24,30 @@ from .dht import (  # noqa: F401
     W_INSERT,
     W_SKIP,
     W_UPDATE,
+    dht_commit,
     dht_execute,
+    dht_issue,
     dht_read,
+    dht_read_async,
     dht_read_cached,
+    dht_read_commit,
     dht_read_dual,
     dht_read_many,
+    dht_read_many_async,
+    dht_read_many_commit,
     dht_read_many_dual,
     dht_write,
+    dht_write_async,
+    dht_write_commit,
     dual_fusable,
     migrate_ops,
     mixed_ops,
     read_ops,
     write_ops,
+)
+from .pipeline import (  # noqa: F401
+    PendingWrites,
+    RoundQueue,
 )
 from .l1cache import (  # noqa: F401
     L1Config,
@@ -83,6 +96,7 @@ from .surrogate import (  # noqa: F401
     lookup_cached,
     lookup_interpolate_or_compute,
     lookup_or_compute,
+    lookup_or_compute_pipelined,
     lookup_or_interpolate,
     make_keys,
     round_significant,

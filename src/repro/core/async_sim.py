@@ -14,6 +14,15 @@ which we count in round-trips).
 Pure numpy on purpose: this is a *model-level* simulator used by
 benchmarks/bench_table2_mismatch.py; the production data path is the JAX
 one.
+
+The delayed-completion idea is promoted into the real engine's
+issue/commit split (DESIGN.md §12): :class:`IssueCommitOracle` below is
+the host-level ordering/consistency twin the interleaving tests drive
+``dht_issue``/``dht_commit`` against — a flat dict whose ground rule is
+the same one JAX async dispatch gives the engine: a round's *effects*
+land at issue time (dataflow chains through the returned state), its
+*results* merely materialize at commit time.  In particular a read
+issued after an uncommitted write to the same key must observe it.
 """
 from __future__ import annotations
 
@@ -179,6 +188,61 @@ class AsyncDHT:
             return None
         self.stats.hits += 1
         return self.vals[b].copy()
+
+
+class IssueCommitOracle:
+    """Flat-dict twin of the issue/commit protocol (DESIGN.md §12).
+
+    Models exactly the semantics the split engine promises:
+
+    - ``issue_write`` applies at ISSUE time — later reads (issued or
+      committed in any order afterwards) observe it, because the real
+      engine chains dataflow through the returned state.
+    - ``issue_read`` snapshots at ISSUE time — a commit delayed
+      arbitrarily long returns what the table held when the round was
+      issued, never a later write.
+    - ``commit`` only materializes; it has no effect on the table, and
+      committing out of issue order changes nothing (the FIFO rule of
+      the real engine exists only for the pending-write *forwarding*
+      bookkeeping, not for state semantics).
+
+    The interleaving tests drive random ``dht_issue``/``dht_commit``
+    schedules against this oracle; the promised-write hazard is the one
+    case where the real engine needs extra machinery
+    (``core.pipeline.PendingWrites``) to meet the oracle's answer.
+    """
+
+    def __init__(self):
+        self.table: dict[bytes, np.ndarray] = {}
+        self._seq = 0
+
+    @staticmethod
+    def _row(key) -> bytes:
+        return np.ascontiguousarray(
+            np.asarray(key, dtype=np.uint32)).tobytes()
+
+    def issue_read(self, keys: np.ndarray):
+        """Snapshot the keys now; returns a handle for :meth:`commit`."""
+        vals = [self.table.get(self._row(k)) for k in np.asarray(keys)]
+        self._seq += 1
+        return ("read", self._seq,
+                [None if v is None else v.copy() for v in vals])
+
+    def issue_write(self, keys: np.ndarray, vals: np.ndarray):
+        """Apply now (issue-order semantics); handle carries the count."""
+        keys, vals = np.asarray(keys), np.asarray(vals)
+        for k, v in zip(keys, vals):
+            self.table[self._row(k)] = np.asarray(v, np.uint32).copy()
+        self._seq += 1
+        return ("write", self._seq, len(keys))
+
+    def commit(self, handle):
+        """Materialize an issued round's results: ``(vals, found)`` row
+        lists for reads, the written count for writes."""
+        kind, _seq, payload = handle
+        if kind == "read":
+            return payload, [v is not None for v in payload]
+        return payload
 
 
 def run_mixed_workload(

@@ -39,6 +39,7 @@ from .layout import DHTConfig, DHTState, shard_watermark
 from .op_engine import (
     _flat_axis_index,
     _owner_epoch,
+    InFlightRound,
     OP_MIGRATE,
     OP_READ,
     OP_WRITE,
@@ -48,7 +49,9 @@ from .op_engine import (
     W_INSERT,
     W_SKIP,
     W_UPDATE,
+    dht_commit,
     dht_execute,
+    dht_issue,
     dual_fusable,
     migrate_ops,
     mixed_ops,
@@ -59,6 +62,70 @@ from .op_engine import (
 
 def _ones(keys: jnp.ndarray) -> jnp.ndarray:
     return jnp.ones((keys.shape[0],), bool)
+
+
+def _wire_skew_stats(es: dict) -> dict:
+    """The wire-accounting and skew lanes every wrapper re-exports."""
+    return {k: es[k] for k in (
+        "epoch", "wire_words", "fill_frac", "bin_counts",
+        "bin_max_load", "bin_imbalance", "hot_frac")}
+
+
+def _read_stats(valid, found, es, *, l1_meta: bool = False) -> dict:
+    stats = {
+        "hits": jnp.sum(found).astype(jnp.int32),
+        "misses": jnp.sum(valid & ~found).astype(jnp.int32),
+        "mismatches": es["mismatches"],
+        "dropped": es["dropped"],
+        "lock_tokens": es["lock_tokens"],
+        **_wire_skew_stats(es),
+    }
+    if l1_meta:
+        stats["wmark_post"] = es["wmark_post"]
+    return stats
+
+
+def _write_stats(code, es, *, l1_meta: bool = False) -> dict:
+    stats = {
+        "inserted": jnp.sum(code == W_INSERT).astype(jnp.int32),
+        "updated": jnp.sum(code == W_UPDATE).astype(jnp.int32),
+        "evicted": jnp.sum(code == W_EVICT).astype(jnp.int32),
+        "dropped": es["dropped"],
+        "rounds": es["rounds"],
+        "lock_tokens": es["lock_tokens"],
+        **_wire_skew_stats(es),
+        "code": code,
+    }
+    if l1_meta:
+        stats["wmark_post"] = es["wmark_post"]
+    return stats
+
+
+def dht_write_async(
+    state: DHTState,
+    keys: jnp.ndarray,
+    vals: jnp.ndarray,
+    valid: jnp.ndarray | None = None,
+    *,
+    axis_name: Any = None,
+    l1_meta: bool = False,
+) -> InFlightRound:
+    """Issue a write round without waiting (pipelined half of
+    :func:`dht_write`); pair with :func:`dht_write_commit`."""
+    if valid is None:
+        valid = _ones(keys)
+    rnd = dht_issue(state, write_ops(keys, vals, valid), kinds=("write",),
+                    axis_name=axis_name, l1_meta=l1_meta)
+    rnd.meta["l1_meta"] = l1_meta
+    return rnd
+
+
+def dht_write_commit(
+    rnd: InFlightRound,
+) -> tuple[DHTState, dict[str, jnp.ndarray]]:
+    """Commit an issued write round -> ``(state', stats)``."""
+    state, _, _vals, _found, code, es = dht_commit(rnd)
+    return state, _write_stats(code, es, l1_meta=rnd.meta["l1_meta"])
 
 
 def dht_write(
@@ -81,30 +148,44 @@ def dht_write(
     for every write issued while an L1 cache is attached, so the write is
     what invalidates the cached lines it obsoletes.
     """
+    return dht_write_commit(dht_write_async(
+        state, keys, vals, valid, axis_name=axis_name, l1_meta=l1_meta))
+
+
+def dht_read_async(
+    state: DHTState,
+    keys: jnp.ndarray,
+    valid: jnp.ndarray | None = None,
+    *,
+    axis_name: Any = None,
+    l1_meta: bool = False,
+    pending: Any = None,
+) -> InFlightRound:
+    """Issue a read round without waiting (pipelined half of
+    :func:`dht_read`); pair with :func:`dht_read_commit`.  ``pending``
+    is an optional ``core.pipeline.PendingWrites`` hazard filter: rows
+    whose key has a promised-but-unissued write are served by
+    store-to-load forwarding at commit instead of probing a table that
+    does not hold the value yet."""
     if valid is None:
         valid = _ones(keys)
-    state, _, _vals, _found, code, es = dht_execute(
-        state, write_ops(keys, vals, valid), kinds=("write",),
-        axis_name=axis_name, l1_meta=l1_meta)
-    stats = {
-        "inserted": jnp.sum(code == W_INSERT).astype(jnp.int32),
-        "updated": jnp.sum(code == W_UPDATE).astype(jnp.int32),
-        "evicted": jnp.sum(code == W_EVICT).astype(jnp.int32),
-        "dropped": es["dropped"],
-        "rounds": es["rounds"],
-        "lock_tokens": es["lock_tokens"],
-        "epoch": es["epoch"],
-        "wire_words": es["wire_words"],
-        "fill_frac": es["fill_frac"],
-        "bin_counts": es["bin_counts"],
-        "bin_max_load": es["bin_max_load"],
-        "bin_imbalance": es["bin_imbalance"],
-        "hot_frac": es["hot_frac"],
-        "code": code,
-    }
-    if l1_meta:
-        stats["wmark_post"] = es["wmark_post"]
-    return state, stats
+    rnd = dht_issue(state, read_ops(keys, valid), kinds=("read",),
+                    axis_name=axis_name, l1_meta=l1_meta, pending=pending)
+    rnd.meta["valid"] = valid
+    rnd.meta["l1_meta"] = l1_meta
+    return rnd
+
+
+def dht_read_commit(
+    rnd: InFlightRound,
+) -> tuple[DHTState, jnp.ndarray, jnp.ndarray, dict[str, jnp.ndarray]]:
+    """Commit an issued read round -> ``(state', vals, found, stats)``.
+    Forwarded (hazard-filtered) rows count as hits — the value returned
+    is bit-for-bit what the synchronous schedule would have read."""
+    state, _, vals, found, _code, es = dht_commit(rnd)
+    stats = _read_stats(rnd.meta["valid"], found, es,
+                        l1_meta=rnd.meta["l1_meta"])
+    return state, vals, found, stats
 
 
 def dht_read(
@@ -120,28 +201,8 @@ def dht_read(
     flagged INVALID.  ``l1_meta=True`` adds the locality-tier watermark
     piggyback to the stats (``wmark_post``) so an uncached round issued
     while an L1 is attached still refreshes the coherence table."""
-    if valid is None:
-        valid = _ones(keys)
-    state, _, vals, found, _code, es = dht_execute(
-        state, read_ops(keys, valid), kinds=("read",), axis_name=axis_name,
-        l1_meta=l1_meta)
-    stats = {
-        "hits": jnp.sum(found).astype(jnp.int32),
-        "misses": jnp.sum(valid & ~found).astype(jnp.int32),
-        "mismatches": es["mismatches"],
-        "dropped": es["dropped"],
-        "lock_tokens": es["lock_tokens"],
-        "epoch": es["epoch"],
-        "wire_words": es["wire_words"],
-        "fill_frac": es["fill_frac"],
-        "bin_counts": es["bin_counts"],
-        "bin_max_load": es["bin_max_load"],
-        "bin_imbalance": es["bin_imbalance"],
-        "hot_frac": es["hot_frac"],
-    }
-    if l1_meta:
-        stats["wmark_post"] = es["wmark_post"]
-    return state, vals, found, stats
+    return dht_read_commit(dht_read_async(
+        state, keys, valid, axis_name=axis_name, l1_meta=l1_meta))
 
 
 def dht_read_cached(
@@ -226,6 +287,40 @@ def dht_read_cached(
     return state, l1, vals, found, stats
 
 
+def dht_read_many_async(
+    state: DHTState,
+    keys: jnp.ndarray,
+    valid: jnp.ndarray | None = None,
+    *,
+    axis_name: Any = None,
+    l1_meta: bool = False,
+    pending: Any = None,
+) -> InFlightRound:
+    """Issue a multi-key (n, m, KW) read round without waiting; pair
+    with :func:`dht_read_many_commit`."""
+    n, m = keys.shape[0], keys.shape[1]
+    flat, vflat = routing.flatten_fanout(keys, valid)
+    rnd = dht_read_async(state, flat, vflat, axis_name=axis_name,
+                         l1_meta=l1_meta, pending=pending)
+    rnd.meta["fanout"] = (n, m)
+    return rnd
+
+
+def dht_read_many_commit(
+    rnd: InFlightRound,
+) -> tuple[DHTState, jnp.ndarray, jnp.ndarray, dict[str, jnp.ndarray]]:
+    """Commit an issued multi-key read -> ``(state', vals (n, m, VW),
+    found (n, m), stats)``."""
+    state, val, found, stats = dht_read_commit(rnd)
+    n, m = rnd.meta["fanout"]
+    return (
+        state,
+        routing.unflatten_fanout(val, n, m),
+        routing.unflatten_fanout(found, n, m),
+        stats,
+    )
+
+
 def dht_read_many(
     state: DHTState,
     keys: jnp.ndarray,
@@ -246,16 +341,8 @@ def dht_read_many(
 
     Returns ``(state', vals (n, m, VW), found (n, m), stats)``.
     """
-    n, m = keys.shape[0], keys.shape[1]
-    flat, vflat = routing.flatten_fanout(keys, valid)
-    state, val, found, stats = dht_read(state, flat, vflat,
-                                        axis_name=axis_name, l1_meta=l1_meta)
-    return (
-        state,
-        routing.unflatten_fanout(val, n, m),
-        routing.unflatten_fanout(found, n, m),
-        stats,
-    )
+    return dht_read_many_commit(dht_read_many_async(
+        state, keys, valid, axis_name=axis_name, l1_meta=l1_meta))
 
 
 def dht_read_many_dual(
@@ -407,17 +494,26 @@ def dht_read_dual(
 __all__ = [
     "DHTConfig",
     "DHTState",
+    "InFlightRound",
     "OP_MIGRATE",
     "OP_READ",
     "OP_WRITE",
     "OpBatch",
+    "dht_commit",
     "dht_execute",
+    "dht_issue",
     "dht_read",
+    "dht_read_async",
     "dht_read_cached",
+    "dht_read_commit",
     "dht_read_dual",
     "dht_read_many",
+    "dht_read_many_async",
+    "dht_read_many_commit",
     "dht_read_many_dual",
     "dht_write",
+    "dht_write_async",
+    "dht_write_commit",
     "dual_fusable",
     "migrate_ops",
     "mixed_ops",

@@ -22,6 +22,7 @@ from . import dht as dht_ops
 from . import l1cache
 from .compat import shard_map
 from .layout import DHTConfig, DHTState, dht_create
+from .pipeline import RoundQueue
 
 
 def mesh_axes(mesh: Mesh) -> tuple[str, ...]:
@@ -66,6 +67,23 @@ def _state_shardings(mesh: Mesh, template: DHTState):
 
 
 @dataclasses.dataclass
+class ShardedRound:
+    """An issued-but-uncommitted sharded round (DESIGN.md §12): the
+    host-level twin of ``op_engine.InFlightRound`` for the jitted
+    wrappers.  The jitted call has already returned — every array here
+    is a future under JAX async dispatch — and ``outs`` holds the
+    positional results the matching ``*_commit`` will unpack."""
+
+    source: str
+    outs: tuple
+    stats: dict
+    ops: dict
+    t_start: float
+    t_issued: float
+    committed: bool = False
+
+
+@dataclasses.dataclass
 class ShardedDHT:
     """Jitted sharded read/write closures bound to a mesh.
 
@@ -75,13 +93,20 @@ class ShardedDHT:
     reads AND writes — refreshes the per-shard coherence watermarks from
     the reply-lane piggyback, which is what invalidates cached lines a
     remote write obsoleted.  All table mutations must therefore go
-    through this object's closures while an L1 is attached."""
+    through this object's closures while an L1 is attached.
+
+    ``pipeline_depth`` configures the issue/commit wrappers
+    (:meth:`read_async` / :meth:`write_async`, DESIGN.md §12): it is the
+    depth of the :meth:`round_queue` double buffer AND part of every
+    pipelined closure's cache key, so sync and pipelined closures can
+    never alias in ``_fn_cache``."""
 
     mesh: Mesh
     cfg: DHTConfig
     state: DHTState
     l1cfg: l1cache.L1Config | None = None
     l1: l1cache.L1State | None = None
+    pipeline_depth: int = 2
     # keyed closure cache: (op name, cfg, ring-presence[, extras]) -> jitted
     # shard_map closure — a fresh wrapper per call would retrace every time
     _fn_cache: dict = dataclasses.field(default_factory=dict, repr=False)
@@ -94,8 +119,10 @@ class ShardedDHT:
         """Every hot wrapper (read/write/read_many/execute) fetches its
         jitted closure from here; the key captures exactly the structural
         inputs a retrace depends on — the table cfg (capacity included,
-        so count-driven capacity buckets each get one trace) and whether
-        a membership ring is attached."""
+        so count-driven capacity buckets each get one trace), whether a
+        membership ring is attached, and any wrapper extras (the L1
+        config; the ``("async", pipeline_depth)`` tag of the pipelined
+        wrappers, so sync and pipelined closures never share a slot)."""
         state = self.state if state is None else state
         key = (name, state.cfg, state.ring is None) + tuple(extra)
         fn = self._fn_cache.get(key)
@@ -103,6 +130,9 @@ class ShardedDHT:
             fn = maker()
             self._fn_cache[key] = fn
         return fn
+
+    def _async_key(self) -> tuple:
+        return ("async", int(self.pipeline_depth))
 
     @classmethod
     def create(cls, mesh: Mesh, cfg: DHTConfig, ring=None,
@@ -402,6 +432,90 @@ class ShardedDHT:
             "sharded.read_many", stats,
             ops={"read": int(keys.shape[0] * keys.shape[1])}, t_start=t0)
         return vals, found, stats
+
+    # -- issue/commit pipelined wrappers (DESIGN.md §12) -------------------
+    # The jitted closures are asynchronous already — a call returns device
+    # futures immediately — so the issue half is simply "call and don't
+    # fetch".  The sync wrappers above fetch eagerly when they flush the
+    # stat lanes to the registry (int()/record_round force the scalars);
+    # these defer that fetch to the commit half, letting the caller run
+    # compute (or issue the next round) against the in-flight collective.
+
+    def read_async(self, keys, valid=None) -> ShardedRound:
+        """Issue a read round without waiting; pair with
+        :meth:`read_commit`.  At most ``pipeline_depth`` rounds should be
+        in flight (use :meth:`round_queue`)."""
+        t0 = time.perf_counter()
+        valid = self._ones(keys.shape[0]) if valid is None else valid
+        if self.l1 is not None:
+            fn = self._cached_fn("read_cached", self.read_cached_fn,
+                                 extra=(self.l1cfg,) + self._async_key())
+            self.state, self.l1, vals, found, stats = fn(
+                self.state, self.l1, keys, valid)
+            source = "sharded.read_cached"
+        else:
+            fn = self._cached_fn("read", self.read_fn,
+                                 extra=self._async_key())
+            self.state, vals, found, stats = fn(self.state, keys, valid)
+            source = "sharded.read"
+        return ShardedRound(source=source, outs=(vals, found), stats=stats,
+                            ops={"read": int(keys.shape[0])}, t_start=t0,
+                            t_issued=time.perf_counter())
+
+    def write_async(self, keys, vals, valid=None) -> ShardedRound:
+        """Issue a write round without waiting; pair with
+        :meth:`write_commit`."""
+        t0 = time.perf_counter()
+        valid = self._ones(keys.shape[0]) if valid is None else valid
+        if self.l1 is not None:
+            fn = self._cached_fn("write_refresh", self.write_refresh_fn,
+                                 extra=(self.l1cfg,) + self._async_key())
+            self.state, self.l1, stats = fn(
+                self.state, self.l1, keys, vals, valid)
+        else:
+            fn = self._cached_fn("write", self.write_fn,
+                                 extra=self._async_key())
+            self.state, stats = fn(self.state, keys, vals, valid)
+        return ShardedRound(source="sharded.write", outs=(), stats=stats,
+                            ops={"write": int(keys.shape[0])}, t_start=t0,
+                            t_issued=time.perf_counter())
+
+    def _commit(self, rnd: ShardedRound) -> tuple:
+        assert not rnd.committed, "ShardedRound committed twice"
+        rnd.committed = True
+        t_commit = time.perf_counter()
+        jax.block_until_ready(rnd.outs)
+        now = time.perf_counter()
+        dur = max(now - rnd.t_start, 0.0)
+        hidden = max(t_commit - rnd.t_issued, 0.0)
+        stats = dict(rnd.stats)
+        stats["issue_us"] = (rnd.t_issued - rnd.t_start) * 1e6
+        stats["hidden_us"] = hidden * 1e6
+        stats["commit_wait_us"] = max(now - t_commit, 0.0) * 1e6
+        stats["overlap_frac"] = min(hidden / dur, 1.0) if dur > 0 else 0.0
+        obs_trace.record_round(
+            rnd.source, stats, ops=rnd.ops, t_start=rnd.t_start,
+            phase_marks=[("issue", rnd.t_start), ("hidden", rnd.t_issued),
+                         ("commit", t_commit)])
+        return rnd.outs + (stats,)
+
+    def read_commit(self, rnd: ShardedRound):
+        """Commit an issued read -> ``(vals, found, stats)``; ``stats``
+        gains the overlap lanes (``issue_us`` / ``hidden_us`` /
+        ``commit_wait_us`` / ``overlap_frac``)."""
+        assert rnd.source in ("sharded.read", "sharded.read_cached"), rnd
+        return self._commit(rnd)
+
+    def write_commit(self, rnd: ShardedRound):
+        """Commit an issued write -> ``stats`` (with overlap lanes)."""
+        assert rnd.source == "sharded.write", rnd
+        return self._commit(rnd)[-1]
+
+    def round_queue(self, commit=None) -> RoundQueue:
+        """A ``pipeline_depth``-deep FIFO for this table's in-flight
+        rounds (depth 2 = double buffering); ``commit`` defaults to the
+        source-dispatching :meth:`_commit`."""
+        return RoundQueue(self.pipeline_depth, commit or self._commit)
 
     def telemetry_snapshot(self) -> dict:
         """This process's registry snapshot (see

@@ -29,6 +29,21 @@ epoch table of an in-flight migration) is supplied, each request carries
 an epoch-select lane and is routed to the owner under *that* epoch's
 placement; the per-shard handler probes the corresponding slab.  A
 dual-epoch read is therefore one dispatch, not two sequential reads.
+
+Issue/commit split (DESIGN.md §12): :func:`dht_execute` is now the
+composition of two halves.  :func:`dht_issue` runs the whole
+bin/dispatch/apply/collect cycle *asynchronously* — JAX's async dispatch
+means every returned array is a future — and packages the results into
+an :class:`InFlightRound` handle; :func:`dht_commit` waits for the
+round's replies, resolves any pending-write forwards, and flushes the
+round's telemetry (with issue/commit phase spans and an ``overlap_frac``
+lane measuring what fraction of the round's latency the caller hid by
+doing other work between the two calls).  Because JAX chains dataflow
+through the returned ``state``, issuing round N+1 against round N's
+un-committed output state is safe and bit-for-bit equal to the
+synchronous sequence — the only read-after-write hazard is a *promised*
+write that has not been issued yet, which the ``pending`` conflict
+filter handles (see ``core/pipeline.py``).
 """
 from __future__ import annotations
 
@@ -545,7 +560,45 @@ def _pad_rows(x: jnp.ndarray, rows: int) -> jnp.ndarray:
     return jnp.pad(x, pad)
 
 
-def dht_execute(
+@dataclasses.dataclass
+class InFlightRound:
+    """An issued-but-uncommitted engine round (DESIGN.md §12).
+
+    A host-side handle, NOT a pytree: it holds the round's (future)
+    result arrays plus the bookkeeping :func:`dht_commit` needs to wait,
+    forward, and record.  ``state`` is the round's output table — safe to
+    issue the next round against immediately (dataflow chains through
+    it), which is exactly how the pipelined drivers overlap rounds.
+
+    ``conflict``/``pending`` carry the pending-write hazard bookkeeping:
+    rows masked out of the probe at issue time because a promised-but-
+    not-yet-issued write to the same key would make the table stale for
+    them; commit resolves them from the pending table's published values
+    (store-to-load forwarding).  ``meta`` is free-form wrapper state
+    (e.g. the ShardedDHT commit closure and its L1 bookkeeping).
+    """
+
+    state: DHTState
+    prev: DHTState | None
+    vals: jnp.ndarray
+    found: jnp.ndarray
+    code: jnp.ndarray
+    estats: dict[str, Any]
+    kinds: tuple[str, ...]
+    source: str
+    mix: dict[str, int] | None
+    rec: bool
+    t_start: float
+    t_issued: float
+    marks: list[tuple[str, float]]
+    pending: Any = None
+    conflict: Any = None          # np bool (n,) — forwarded rows
+    keys_np: Any = None           # np uint32 (n, KW) — forward lookup keys
+    committed: bool = False
+    meta: dict = dataclasses.field(default_factory=dict)
+
+
+def dht_issue(
     state: DHTState,
     ops: OpBatch,
     *,
@@ -557,9 +610,11 @@ def dht_execute(
     placement: tuple[jnp.ndarray, jnp.ndarray] | None = None,
     l1_meta: bool = False,
     elide_self: bool | None = None,
-) -> tuple[DHTState, DHTState | None, jnp.ndarray, jnp.ndarray,
-           jnp.ndarray, dict[str, jnp.ndarray]]:
-    """Execute an op-tagged request batch in ONE collective round.
+    source: str | None = None,
+    pending: Any = None,
+) -> InFlightRound:
+    """Issue an op-tagged request batch as ONE collective round and
+    return without waiting: the issue half of the engine.
 
     ``kinds`` is the static set of op kinds the batch may contain — it
     prunes the dispatched lanes and the shard-side machinery, so a
@@ -587,18 +642,40 @@ def dht_execute(
       rounds keep full routing so the cross-device last-writer-wins
       priority — buffer row order — is unchanged).
 
-    Returns ``(state', prev', vals, found, code, estats)``:
+    Pipelining extras over the classic ``dht_execute`` keywords:
 
-    - ``vals``/``found`` — probe results (reads and migrate get-or-put
-      hits); zeros/False for pure writes.
-    - ``code`` — per-item write code (``W_INSERT``/``W_UPDATE``/
-      ``W_EVICT``/``W_SKIP``; ``W_DROPPED`` for reads and overflow).
-    - ``estats`` — shard-side counters: ``mismatches``, ``rounds``,
-      ``lock_tokens``, ``dropped``, ``epoch``.
+    - ``source`` — the trace-event name flushed at commit (defaults to
+      ``"engine.<kinds>"``, matching the synchronous path).
+    - ``pending`` — a ``core.pipeline.PendingWrites`` table.  Read rows
+      whose key has a *promised-but-not-yet-issued* write are masked out
+      of the probe (no bin slot, no wire) and resolved at commit time by
+      store-to-load forwarding from the table's published values.  Reads
+      issued *after* a write round was issued need no filter: dataflow
+      through the chained ``state`` already orders them.  Eager uniform
+      read rounds only.
+
+    Returns an :class:`InFlightRound`; pass it to :func:`dht_commit` for
+    the classic ``(state', prev', vals, found, code, estats)`` tuple.
+    Commit order across rounds must be issue order (FIFO) whenever a
+    ``pending`` filter is in play.
     """
     cfg = state.cfg
     kinds = tuple(kinds)
     assert kinds and all(k in KINDS for k in kinds), kinds
+    conflict = keys_np = None
+    if pending is not None:
+        assert kinds == ("read",) and prev is None and ops.op is None, (
+            "pending-write filtering applies to uniform read rounds")
+        assert not isinstance(ops.keys, jax.core.Tracer), (
+            "pending-write filtering is a host-side (eager) mechanism")
+        import numpy as np
+
+        cmask = pending.conflicts(np.asarray(ops.keys),
+                                  np.asarray(ops.valid))
+        if cmask.any():
+            conflict, keys_np = cmask, np.asarray(ops.keys)
+            ops = OpBatch(keys=ops.keys,
+                          valid=ops.valid & jnp.asarray(~cmask))
     do_write = ("write" in kinds) or ("migrate" in kinds)
     if do_write:
         assert ops.vals is not None, "write/migrate batches need a value lane"
@@ -809,6 +886,9 @@ def dht_execute(
         prows = prev.meta.shape[0]
         prev_out = _state_from(
             prev, {k2: v2[:prows] for k2, v2 in pslab.items()})
+    mix = None
+    marks: list[tuple[str, float]] = []
+    t_issued = 0.0
     if rec:
         if ops.op is None:
             mix = {kinds[0]: int(jnp.sum(ops.valid))}
@@ -817,15 +897,99 @@ def dht_execute(
                    for name, tag in (("read", OP_READ), ("write", OP_WRITE),
                                      ("migrate", OP_MIGRATE))
                    if name in kinds}
+        if conflict is not None:
+            # forwarded rows were masked out of the probe but are still
+            # this round's logical traffic
+            mix["read"] = mix.get("read", 0) + int(conflict.sum())
+        marks = [("bin", t0), ("dispatch", t_dispatch),
+                 ("apply", t_apply), ("collect", t_collect)]
+        t_issued = time.perf_counter()
+    return InFlightRound(
+        state=state_out, prev=prev_out, vals=val_out, found=found_out,
+        code=code_out, estats=estats, kinds=kinds,
+        source=source or ("engine." + "+".join(kinds)), mix=mix, rec=rec,
+        t_start=t0, t_issued=t_issued, marks=marks,
+        pending=pending, conflict=conflict, keys_np=keys_np)
+
+
+def dht_commit(
+    rnd: InFlightRound,
+) -> tuple[DHTState, DHTState | None, jnp.ndarray, jnp.ndarray,
+           jnp.ndarray, dict[str, jnp.ndarray]]:
+    """Wait for an issued round's replies: the commit half.
+
+    Resolves pending-write forwards (conflicted rows get the promised
+    value, ``found=True`` — bit-for-bit what a synchronous read after
+    the write round would have returned), blocks until the reply arrays
+    are device-complete (eager only — under a trace this is a no-op and
+    the pair degenerates to the classic fused round), and flushes the
+    round's telemetry with two extra ingredients over the synchronous
+    path: a ``commit`` phase span, and ``issue_us`` / ``hidden_us`` /
+    ``commit_wait_us`` / ``overlap_frac`` stat lanes.  ``hidden_us`` is
+    the host time spent *elsewhere* between issue returning and commit
+    being called — latency the caller successfully overlapped;
+    ``overlap_frac`` is its share of the round's total duration.
+
+    Returns the classic engine tuple
+    ``(state', prev', vals, found, code, estats)``.
+    """
+    assert not rnd.committed, "InFlightRound committed twice"
+    rnd.committed = True
+    vals, found, code = rnd.vals, rnd.found, rnd.code
+    n_fwd = 0
+    if rnd.conflict is not None:
+        fvals = rnd.pending.resolve(rnd.keys_np, rnd.conflict)
+        cm = jnp.asarray(rnd.conflict)
+        vals = jnp.where(cm[:, None], jnp.asarray(fvals), vals)
+        found = found | cm
+        n_fwd = int(rnd.conflict.sum())
+    t_commit = time.perf_counter() if rnd.rec else 0.0
+    if not isinstance(vals, jax.core.Tracer):
+        jax.block_until_ready((vals, found, code))
+    if rnd.rec:
+        now = time.perf_counter()
+        dur = max(now - rnd.t_start, 0.0)
+        hidden = max(t_commit - rnd.t_issued, 0.0)
+        stats = dict(rnd.estats)
+        stats["issue_us"] = (rnd.t_issued - rnd.t_start) * 1e6
+        stats["hidden_us"] = hidden * 1e6
+        stats["commit_wait_us"] = max(now - t_commit, 0.0) * 1e6
+        stats["overlap_frac"] = min(hidden / dur, 1.0) if dur > 0 else 0.0
+        if n_fwd:
+            stats["forwarded"] = n_fwd
         obs_trace.record_round(
-            "engine." + "+".join(kinds), estats, ops=mix, t_start=t0,
-            phase_marks=[("bin", t0), ("dispatch", t_dispatch),
-                         ("apply", t_apply), ("collect", t_collect)])
-    return state_out, prev_out, val_out, found_out, code_out, estats
+            rnd.source, stats, ops=rnd.mix, t_start=rnd.t_start,
+            phase_marks=rnd.marks + [("commit", t_commit)])
+    return rnd.state, rnd.prev, vals, found, code, rnd.estats
+
+
+def dht_execute(
+    state: DHTState,
+    ops: OpBatch,
+    *,
+    kinds: Sequence[str] = KINDS,
+    prev: DHTState | None = None,
+    axis_name: Any = None,
+    capacity: int | None = None,
+    hashes: tuple[jnp.ndarray, jnp.ndarray] | None = None,
+    placement: tuple[jnp.ndarray, jnp.ndarray] | None = None,
+    l1_meta: bool = False,
+    elide_self: bool | None = None,
+) -> tuple[DHTState, DHTState | None, jnp.ndarray, jnp.ndarray,
+           jnp.ndarray, dict[str, jnp.ndarray]]:
+    """Execute an op-tagged request batch in ONE collective round,
+    synchronously: ``dht_commit(dht_issue(...))``.  See
+    :func:`dht_issue` for the keyword semantics and :func:`dht_commit`
+    for the return tuple."""
+    return dht_commit(dht_issue(
+        state, ops, kinds=kinds, prev=prev, axis_name=axis_name,
+        capacity=capacity, hashes=hashes, placement=placement,
+        l1_meta=l1_meta, elide_self=elide_self))
 
 
 __all__ = [
     "KINDS",
+    "InFlightRound",
     "OP_MIGRATE",
     "OP_READ",
     "OP_WRITE",
@@ -835,7 +999,9 @@ __all__ = [
     "W_INSERT",
     "W_SKIP",
     "W_UPDATE",
+    "dht_commit",
     "dht_execute",
+    "dht_issue",
     "dual_fusable",
     "migrate_ops",
     "mixed_ops",

@@ -1,0 +1,156 @@
+"""Pipelining support for the issue/commit op-engine (DESIGN.md §12).
+
+Two small host-side pieces that the split engine halves
+(:func:`core.op_engine.dht_issue` / :func:`dht_commit`) lean on:
+
+:class:`PendingWrites` — the read-after-promised-write hazard table.
+JAX's async dispatch orders rounds that are *issued*: issuing read N+1
+against round N's output ``state`` chains through dataflow, so no
+filter is needed there.  The one hazard left is a write the driver has
+*promised* (it knows the keys it will write) but whose values are still
+being computed, so the write round has not been issued yet.  A read
+issued in that window would probe a table that does not hold the value.
+The table closes the gap with store-to-load forwarding, exactly like a
+CPU store buffer: ``promise`` registers the keys at miss time,
+``conflicts`` masks matching read rows out of the probe at issue time
+(no bin slot, no wire), ``publish`` attaches the computed values, and
+``resolve`` serves the masked rows at commit time.  ``retire`` drops
+keys once their write round has been issued — from then on dataflow
+ordering covers them.
+
+:class:`RoundQueue` — a depth-D FIFO of in-flight rounds (depth 2 =
+double buffering).  ``push`` issues-side: it enqueues a new handle and,
+when the queue is full, commits and returns the OLDEST round — so at
+most D rounds are ever in flight and commit order is issue order (FIFO),
+which the forwarding protocol requires.  Depth 2 suffices because the
+engine's round latency is one collective: round N+1's issue half (bin +
+dispatch) is the only work that can overlap round N's in-flight
+apply/collect, so a deeper queue only adds memory pressure (two live
+``state`` aliases per extra slot) without more overlap to harvest.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Any, Callable
+
+import numpy as np
+
+__all__ = ["PendingWrites", "RoundQueue"]
+
+
+def _key_rows(keys: Any) -> np.ndarray:
+    k = np.asarray(keys)
+    if k.ndim == 1:
+        k = k[:, None]
+    return np.ascontiguousarray(k.astype(np.uint32, copy=False))
+
+
+class PendingWrites:
+    """Host-side store buffer for promised-but-unissued writes.
+
+    Keys are uint32 ``(KW,)`` rows; values uint32 ``(VW,)`` rows.
+    ``val_words`` fixes the forwarded-value width so ``resolve`` can
+    return a dense ``(n, VW)`` matrix even when nothing matched.
+    """
+
+    def __init__(self, val_words: int):
+        self.val_words = int(val_words)
+        self._table: dict[bytes, np.ndarray | None] = {}
+
+    def __len__(self) -> int:
+        return len(self._table)
+
+    def promise(self, keys: Any, mask: Any = None) -> None:
+        """Register keys the driver WILL write (values not known yet)."""
+        rows = _key_rows(keys)
+        m = np.ones(rows.shape[0], bool) if mask is None else np.asarray(mask)
+        for i in np.flatnonzero(m):
+            self._table.setdefault(rows[i].tobytes(), None)
+
+    def publish(self, keys: Any, vals: Any, mask: Any = None) -> None:
+        """Attach computed values to promised keys (or add new ones):
+        from here the keys are forwardable."""
+        rows = _key_rows(keys)
+        v = np.asarray(vals, dtype=np.uint32).reshape(rows.shape[0], -1)
+        m = np.ones(rows.shape[0], bool) if mask is None else np.asarray(mask)
+        for i in np.flatnonzero(m):
+            self._table[rows[i].tobytes()] = v[i]
+
+    def retire(self, keys: Any, mask: Any = None) -> None:
+        """Drop keys whose write round has been ISSUED — dataflow through
+        the chained state orders any later read against them."""
+        rows = _key_rows(keys)
+        m = np.ones(rows.shape[0], bool) if mask is None else np.asarray(mask)
+        for i in np.flatnonzero(m):
+            self._table.pop(rows[i].tobytes(), None)
+
+    def conflicts(self, keys: Any, valid: Any = None) -> np.ndarray:
+        """Bool mask of read rows whose key is currently pending — these
+        must not probe the table (it is stale for them)."""
+        rows = _key_rows(keys)
+        n = rows.shape[0]
+        v = np.ones(n, bool) if valid is None else np.asarray(valid)
+        out = np.zeros(n, bool)
+        if not self._table:
+            return out
+        for i in range(n):
+            if v[i] and rows[i].tobytes() in self._table:
+                out[i] = True
+        return out
+
+    def resolve(self, keys: Any, mask: Any) -> np.ndarray:
+        """Forwarded values for the masked rows: ``(n, val_words)``
+        uint32, zeros where the mask is off.  A masked key whose value
+        was never published is a driver ordering bug — loud failure
+        beats serving garbage."""
+        rows = _key_rows(keys)
+        m = np.asarray(mask)
+        out = np.zeros((rows.shape[0], self.val_words), np.uint32)
+        for i in np.flatnonzero(m):
+            v = self._table.get(rows[i].tobytes())
+            if v is None:
+                raise RuntimeError(
+                    "PendingWrites.resolve: conflicted key was never "
+                    "published — commit ran before the producer published "
+                    "its value (driver ordering bug)")
+            out[i] = v[: self.val_words]
+        return out
+
+
+class RoundQueue:
+    """Depth-D FIFO of in-flight rounds (depth 2 = double buffering).
+
+    ``commit`` is the function that retires one handle (defaults to the
+    engine's :func:`dht_commit`; wrappers pass their own commit half).
+    ``push(rnd)`` enqueues and, once D rounds are in flight, commits and
+    returns the oldest one (else ``None``); ``drain()`` commits whatever
+    is left, in issue order.
+    """
+
+    def __init__(self, depth: int = 2,
+                 commit: Callable[[Any], Any] | None = None):
+        if depth < 1:
+            raise ValueError(f"pipeline depth must be >= 1, got {depth}")
+        if commit is None:
+            from .op_engine import dht_commit as commit
+        self.depth = int(depth)
+        self.commit = commit
+        self._q: deque[Any] = deque()
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def push(self, rnd: Any) -> Any | None:
+        """Enqueue an issued round; returns the committed result of the
+        oldest round iff the queue was full (FIFO), else ``None``."""
+        self._q.append(rnd)
+        if len(self._q) > self.depth - 1:
+            return self.commit(self._q.popleft())
+        return None
+
+    def drain(self) -> list[Any]:
+        """Commit every still-in-flight round, in issue order."""
+        out = []
+        while self._q:
+            out.append(self.commit(self._q.popleft()))
+        return out

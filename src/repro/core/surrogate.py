@@ -18,6 +18,7 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..obs import metrics as obs_metrics
 from . import dht as dht_ops
@@ -26,6 +27,7 @@ from . import membership, migrate, neighbors, routing
 from .interp import PROV_MISS, InterpConfig
 from .layout import DHTConfig, DHTState, dht_create, pack_floats, unpack_floats
 from .neighbors import round_significant  # noqa: F401  (canonical home moved)
+from .pipeline import PendingWrites, RoundQueue
 
 
 @dataclasses.dataclass(frozen=True)
@@ -170,6 +172,136 @@ def lookup_or_compute(
         "stored": jnp.sum(code == dht_ops.W_INSERT).astype(jnp.int32),
     }
     return state, outputs, found, stats
+
+
+def lookup_or_compute_pipelined(
+    cfg: SurrogateConfig,
+    state: DHTState,
+    batches,
+    compute_fn,
+    *,
+    depth: int = 2,
+):
+    """Pipelined surrogate driver (DESIGN.md §12): probe batch N+1 while
+    computing the misses of batch N.
+
+    The synchronous :func:`lookup_or_compute` serializes
+    ``read -> compute -> write`` per batch, so every batch eats the full
+    collective round latency.  Here the read round for batch N+1 is
+    *issued* (``dht_read_async``) before batch N's miss compute starts —
+    JAX's async dispatch runs the in-flight round while the host computes
+    — and committed only when its results are needed, hiding the round
+    behind ``compute_fn``.
+
+    Hazard rule (the store buffer, :class:`core.pipeline.PendingWrites`):
+    batch N+1's read is issued *before* batch N's write-back, so any of
+    its keys that batch N is about to write would probe a stale table.
+    Those rows are promised at miss time, masked out of the probe, and
+    served by store-to-load forwarding at commit — making the result
+    bit-for-bit identical to the sequential schedule.  Read-ahead deeper
+    than one batch is impossible without breaking this rule (batch N+2's
+    filter needs batch N+1's miss set, known only at its commit), which
+    is why depth 2 is the whole design space: ``depth < 2`` falls back to
+    the synchronous path, ``depth >= 2`` pipelines with one round ahead
+    plus a depth-``depth`` queue of lazily-committed write rounds.
+
+    ``batches`` is a sequence of ``(n_i, n_inputs)`` input arrays
+    (host-loop / eager only).  Returns ``(state', outputs, found,
+    stats)`` with per-batch lists for ``outputs``/``found`` and summed
+    ``stats`` (``hits``/``misses``/``stored`` plus ``forwarded``, the
+    number of hazard-filtered rows served by forwarding).
+    """
+    batches = list(batches)
+    totals = {"hits": 0, "misses": 0, "stored": 0, "forwarded": 0}
+    outs: list = []
+    founds: list = []
+
+    def _finish(state, record=True):
+        stats = {k: jnp.int32(v) for k, v in totals.items()}
+        if record:
+            _record_provenance(stats)
+        return state, outs, founds, stats
+
+    if not batches:
+        return _finish(state)
+    if depth < 2:
+        for inputs in batches:
+            state, out, found, st = lookup_or_compute(
+                cfg, state, inputs, compute_fn)
+            outs.append(out)
+            founds.append(found)
+            for k in ("hits", "misses", "stored"):
+                totals[k] += int(st[k])
+        # lookup_or_compute already flushed provenance per batch
+        return _finish(state, record=False)
+
+    assert not (isinstance(state.keys, jax.core.Tracer)
+                or isinstance(batches[0], jax.core.Tracer)), (
+        "the pipelined driver is a host-loop scheduler — under jit use "
+        "the fused get-or-put path of lookup_or_compute")
+    pending = PendingWrites(cfg.dht.val_words)
+    wq = RoundQueue(depth, commit=dht_ops.dht_write_commit)
+
+    def _issue_read(st, inputs):
+        keys = make_keys(cfg, inputs)
+        rnd = dht_ops.dht_read_async(st, keys, pending=pending)
+        rnd.meta["skeys"] = keys
+        return rnd
+
+    rd = _issue_read(state, batches[0])
+    state = rd.state
+    to_retire = None
+    for i, inputs in enumerate(batches):
+        keys = rd.meta["skeys"]
+        fwd = 0 if rd.conflict is None else int(rd.conflict.sum())
+        _, val_words, found, rstats = dht_ops.dht_read_commit(rd)
+        if to_retire is not None:
+            # the previous batch's write round is issued AND the one read
+            # that could still forward from it has now committed — only
+            # here is it safe to drop the promises (resolve needs the
+            # published value until that read's commit)
+            pending.retire(*to_retire)
+            to_retire = None
+        totals["hits"] += int(rstats["hits"])
+        totals["misses"] += int(rstats["misses"])
+        totals["forwarded"] += fwd
+        miss = ~found
+        miss_np = np.asarray(miss)
+        keys_np = np.asarray(keys)
+        any_miss = bool(miss_np.any())
+        if any_miss:
+            # promise BEFORE issuing the next read: its conflict filter
+            # must know the keys this batch is about to write
+            pending.promise(keys_np, miss_np)
+        nxt = None
+        if i + 1 < len(batches):
+            nxt = _issue_read(state, batches[i + 1])
+            state = nxt.state
+        if any_miss:
+            # the expensive part — overlaps nxt's in-flight round
+            computed = compute_fn(inputs)
+            outputs = jnp.where(
+                found[:, None], unpack_floats(val_words, cfg.n_outputs),
+                computed)
+            wvals = pack_floats(computed, cfg.dht.val_words)
+            pending.publish(keys_np, np.asarray(wvals), miss_np)
+            w = dht_ops.dht_write_async(state, keys, wvals, valid=miss)
+            state = w.state
+            # write issued: dataflow orders every read issued from here
+            # on; the already-issued read-ahead may still forward, so
+            # retirement waits for its commit (top of the next iteration)
+            to_retire = (keys_np, miss_np)
+            done = wq.push(w)
+            if done is not None:
+                totals["stored"] += int(done[1]["inserted"])
+        else:
+            outputs = unpack_floats(val_words, cfg.n_outputs)
+        outs.append(outputs)
+        founds.append(found)
+        rd = nxt
+    for _st, wstats in wq.drain():
+        totals["stored"] += int(wstats["inserted"])
+    return _finish(state)
 
 
 def _interp_tail(cfg: SurrogateConfig, inputs, points, val_words, found,

@@ -86,14 +86,16 @@ def render_timeline(events: list[dict], last: int = 30) -> str:
         extras = []
         for key, label in (("wire_words", "wire"), ("fill_frac", "fill"),
                            ("bin_imbalance", "imb"), ("hot_frac", "hot"),
-                           ("l1_hits", "l1"), ("dropped", "drop")):
+                           ("l1_hits", "l1"), ("dropped", "drop"),
+                           ("overlap_frac", "ov")):
             if key in stats:
                 extras.append(f"{label}={_fmt_count(stats[key])}")
         spans = e.get("spans", {})
         if spans and dur_us > 0:
             mix = " ".join(
                 f"{p}:{100 * spans[p][1] * 1e6 / dur_us:.0f}%"
-                for p in ("bin", "dispatch", "apply", "collect")
+                for p in ("bin", "dispatch", "apply", "collect", "commit",
+                          "issue", "hidden")
                 if p in spans)
             if mix:
                 extras.append(mix)

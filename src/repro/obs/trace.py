@@ -49,7 +49,7 @@ __all__ = ["RoundEvent", "TraceRecorder", "get_tracer", "record_round",
            "record_event", "count_traced_rounds", "PHASES",
            "fence_enabled", "set_fence", "fence"]
 
-PHASES = ("bin", "dispatch", "apply", "collect")
+PHASES = ("bin", "dispatch", "apply", "collect", "commit")
 
 _FENCE = os.environ.get("OBS_FENCE", "0") in ("1", "true", "yes")
 
@@ -236,6 +236,14 @@ def record_round(source: str, stats: dict, *, ops: dict | None = None,
     if "hot_frac" in scal:
         reg.observe("engine.hot_frac", scal["hot_frac"],
                     edges=metrics.FRACTION_EDGES)
+    # issue/commit pipelining lanes (DESIGN.md §12): what fraction of the
+    # round's latency the caller hid by working between the two halves
+    if "overlap_frac" in scal:
+        reg.observe("engine.overlap_frac", scal["overlap_frac"],
+                    edges=metrics.FRACTION_EDGES)
+    if "hidden_us" in scal:
+        reg.observe("engine.hidden_us", scal["hidden_us"],
+                    edges=metrics.LATENCY_EDGES_US)
     if t_start is not None or dur > 0.0:
         reg.observe("engine.round_latency_us", dur * 1e6,
                     edges=metrics.LATENCY_EDGES_US)

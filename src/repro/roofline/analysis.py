@@ -156,6 +156,28 @@ class Roofline:
         }
 
 
+def overlap_speedup_bound(t_compute: float, t_round: float) -> dict:
+    """Perfect-overlap bound for the pipelined issue/commit engine
+    (DESIGN.md §12) — the same max-of-terms rule as
+    :attr:`Roofline.step_time`, applied to the surrogate driver's two
+    terms.  The synchronous schedule pays ``t_compute + t_round`` per
+    batch; a pipelined one that fully hides the in-flight round behind
+    the miss compute floors at ``max(t_compute, t_round)``.
+
+    Returns the two step times, the resulting ``speedup_bound``, and
+    ``hideable_frac`` — the fraction of the round's latency that compute
+    is long enough to hide (the ceiling ``overlap_frac`` can reach)."""
+    sync = t_compute + t_round
+    pipe = max(t_compute, t_round)
+    return {
+        "t_sync_s": sync,
+        "t_overlap_s": pipe,
+        "speedup_bound": (sync / pipe) if pipe > 0 else 1.0,
+        "hideable_frac": (min(t_compute, t_round) / t_round)
+        if t_round > 0 else 0.0,
+    }
+
+
 def analyze(compiled, hlo_text: str, chips: int, model_flops: float) -> Roofline:
     ca = compiled.cost_analysis()
     if isinstance(ca, (list, tuple)):

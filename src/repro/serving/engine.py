@@ -90,10 +90,16 @@ class Engine:
 
         out = np.zeros((b, max_new_tokens), np.int32)
         tok = greedy_sample(logits_last, self.cfg)[:, None]
+        # double-buffered decode (DESIGN.md §12): issue step i's device
+        # work BEFORE fetching token i to the host — decode only needs the
+        # device-resident ``tok`` (dataflow), so the np.asarray transfer
+        # of token i overlaps the in-flight compute of token i+1 instead
+        # of serializing every step on a host sync.
         for i in range(max_new_tokens):
-            out[:, i] = np.asarray(tok[:, 0])
             logits, cache = self._decode(self.params, cache, tok, jnp.int32(s + i))
-            tok = greedy_sample(logits, self.cfg)[:, None]
+            next_tok = greedy_sample(logits, self.cfg)[:, None]
+            out[:, i] = np.asarray(tok[:, 0])
+            tok = next_tok
         return GenerationResult(
             tokens=out,
             prefill_tokens_computed=int(suffix.shape[1]) * b,

@@ -291,14 +291,16 @@ def test_fence_toggle_and_barrier(fresh_registry):
     try:
         assert fence_enabled()
         fence(jnp.arange(4), [jnp.ones(2)])     # must not raise
-        # fenced eager round still records all four phase spans
+        # fenced eager round still records every phase span (incl. the
+        # commit half of the issue/commit split, DESIGN.md §12)
         cfg = DHTConfig(n_shards=2, buckets_per_shard=16, key_words=4,
                         val_words=3)
         state = dht_create(cfg)
         keys = jnp.arange(32, dtype=jnp.uint32).reshape(8, 4)
         state, _ = dht_write(state, keys, jnp.ones((8, 3), jnp.uint32))
         ev = obs.get_tracer().events()[-1]
-        assert set(ev.spans) == {"bin", "dispatch", "apply", "collect"}
+        assert set(ev.spans) == {"bin", "dispatch", "apply", "collect",
+                                 "commit"}
     finally:
         set_fence(prev)
     assert fence_enabled() == prev

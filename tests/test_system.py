@@ -35,3 +35,20 @@ def test_quickstart_runs():
 
     stats = quickstart.main(verbose=False)
     assert stats["read_hits"] == stats["n_items"]
+
+
+def test_poet_pipelined_matches_sequential():
+    """The pipelined driver (DESIGN.md §12) must be bit-for-bit the
+    synchronous schedule through the full coupled simulation."""
+    import dataclasses
+
+    from examples.poet_reactive_transport import PoetConfig, run_simulation
+
+    cfg = PoetConfig(nx=10, ny=20, n_steps=5, sig_digits=5, solver_iters=50)
+    seq = run_simulation(cfg, use_dht=True)
+    pipe = run_simulation(
+        dataclasses.replace(cfg, use_pipeline=True), use_dht=True)
+    np.testing.assert_array_equal(
+        np.asarray(pipe["conc"]), np.asarray(seq["conc"]))
+    assert pipe["hits"] == seq["hits"]
+    assert pipe["misses"] == seq["misses"]
