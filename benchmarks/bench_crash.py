@@ -1,0 +1,191 @@
+"""Crash-tolerance benchmark (DESIGN.md §13): kill a shard mid-workload.
+
+The paper's DHT loses a rank's entries with the rank (MPI fault = job
+fault); this bench measures what k-successor replication buys and what
+it costs, on the paper's Zipf(0.99) key mix:
+
+- **cost**: healthy write amplification k=2 vs k=1 (wire words — the
+  replica fan-out rides the same engine batch, so extra ROUNDS must be
+  zero) and healthy read parity (reads touch one replica; k=2 must match
+  k=1 round-for-round).
+- **availability**: a shard is crashed (slab wiped) mid-workload; every
+  key acked before OR after the crash must read back bit-identically
+  from the surviving successors, in the same number of collective
+  rounds (failover is a routing decision, not a retry loop).
+- **convergence**: after ``recover_shard`` the owner serves again only
+  once anti-entropy repair re-replicates its keys; the bench measures
+  that recovered-but-unrepaired availability gap, then drives
+  ``repair_run`` and asserts the watermark diff closes to ZERO and no
+  acked write was lost.
+
+Gates read by CI from the gauges this bench publishes (``bench.crash.*``):
+``lost_acked == 0``, ``diff_after == 0``, ``outage_found_frac == 1``,
+``extra_write_rounds == 0``, ``availability_gap`` bounded by ~1/S.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import obs
+from repro.core import (
+    DHTConfig,
+    crash_shard,
+    dht_create,
+    dht_read,
+    dht_write,
+    dht_write_replicated,
+    migrate,
+    recover_shard,
+    ring_create,
+)
+
+from .common import Row, make_keys_vals, time_fn
+
+VICTIM = 2
+
+
+def _workload(n: int, kw: int = 20, vw: int = 26):
+    """Half Zipf(0.99) (the paper's hot-key traffic), half uniform (key
+    diversity, so every shard holds a meaningful replica share), with
+    DETERMINISTIC values (a pure function of the key) so duplicate ids
+    collapse to one value and read-back can be checked bit-for-bit,
+    mirroring the surrogate's write-once publish."""
+    kz, _ = make_keys_vals(n // 2, kw=kw, dist="zipf", seed=11)
+    ku, _ = make_keys_vals(n - n // 2, kw=kw, dist="uniform", seed=12)
+    keys = jnp.concatenate([kz, ku], axis=0)
+    k = np.asarray(keys)
+    vals = np.zeros((n, vw), np.uint32)
+    for w in range(vw):
+        vals[:, w] = (k[:, 0] * (2 * w + 1) * 2654435761 + w) & 0xFFFFFFFF
+    return keys, jnp.asarray(vals)
+
+
+def _owners_of(state, keys):
+    """Host-side owner shard of each key (successor 0)."""
+    from repro.core.hashing import hash64
+    from repro.core.membership import ring_successors_np
+
+    h_hi, _ = hash64(jnp.asarray(keys))
+    return ring_successors_np(state.ring, np.asarray(h_hi), 1)[:, 0]
+
+
+def _check_reads(state, keys, vals):
+    state, got, found, rs = dht_read(state, keys)
+    found = np.asarray(found)
+    ok_vals = bool(np.array_equal(np.asarray(got)[found],
+                                  np.asarray(vals)[found]))
+    return state, found, ok_vals, rs
+
+
+def run(quick: bool = True):
+    rows = []
+    n = 2048 if quick else 16384
+    s = 8
+    base = dict(n_shards=s, buckets_per_shard=(1 << 12), capacity=n)
+    keys, vals = _workload(n)
+
+    # -- healthy cost: k=1 baseline vs k=2 replicated, same workload ------
+    st1 = dht_create(DHTConfig(**base), ring_create(s))
+    t_w1, (st1, ws1) = time_fn(lambda: dht_write(st1, keys, vals), iters=2)
+    st2 = dht_create(DHTConfig(**base, n_replicas=2), ring_create(s))
+    t_w2, (st2, ws2) = time_fn(
+        lambda: dht_write_replicated(st2, keys, vals), iters=2)
+    amp = float(ws2["wire_words"]) / max(float(ws1["wire_words"]), 1.0)
+    extra_rounds = int(ws2["rounds"]) - int(ws1["rounds"])
+    rows.append(Row("crash/write_k1", t_w1 / n * 1e6,
+                    f"wire={int(ws1['wire_words'])};"
+                    f"rounds={int(ws1['rounds'])}"))
+    rows.append(Row("crash/write_k2", t_w2 / n * 1e6,
+                    f"wire={int(ws2['wire_words'])};"
+                    f"rounds={int(ws2['rounds'])};wire_amp={amp:.3f};"
+                    f"extra_rounds={extra_rounds};"
+                    f"acked={int(ws2['acked'])};"
+                    f"replica_writes={int(ws2['replica_writes'])}"))
+
+    # -- healthy read parity: one replica answers, k must not matter ------
+    t_r1, (st1, _, f1, rs1) = time_fn(lambda: dht_read(st1, keys), iters=2)
+    t_r2, (st2, _, f2, rs2) = time_fn(lambda: dht_read(st2, keys), iters=2)
+    # a read touches ONE replica: k=2 must move the same wire words in
+    # the same single-round schedule as k=1
+    read_wire_ratio = (float(rs2["wire_words"])
+                       / max(float(rs1["wire_words"]), 1.0))
+    rows.append(Row("crash/read_k1", t_r1 / n * 1e6,
+                    f"hit={float(np.mean(np.asarray(f1))):.4f};"
+                    f"wire={int(rs1['wire_words'])}"))
+    rows.append(Row("crash/read_k2_healthy", t_r2 / n * 1e6,
+                    f"hit={float(np.mean(np.asarray(f2))):.4f};"
+                    f"wire={int(rs2['wire_words'])};"
+                    f"wire_ratio={read_wire_ratio:.3f};"
+                    f"fallback={int(rs2['fallback_reads'])}"))
+
+    # -- crash mid-workload: first half acked, kill, second half acked ----
+    st = dht_create(DHTConfig(**base, n_replicas=2), ring_create(s))
+    half = n // 2
+    st, wa = dht_write_replicated(st, keys[:half], vals[:half])
+    t0 = time.perf_counter()
+    st = crash_shard(st, VICTIM)
+    jax.block_until_ready(st.keys)
+    t_crash = time.perf_counter() - t0
+    st, wb = dht_write_replicated(st, keys[half:], vals[half:])
+    acked = int(wa["acked"]) + int(wb["acked"])
+
+    # every acked key must be served by the survivors, bit-identically,
+    # with no extra rounds (failover = routing, not retry)
+    t_out, (st, f_out, ok_out, rs_out) = time_fn(
+        lambda: _check_reads(st, keys, vals), iters=2)
+    outage_found = float(np.mean(np.asarray(f_out)))
+    rows.append(Row("crash/outage_read", t_out / n * 1e6,
+                    f"found={outage_found:.4f};vals_ok={int(ok_out)};"
+                    f"wire={int(rs_out['wire_words'])};"
+                    f"fallback={int(rs_out['fallback_reads'])};"
+                    f"crash_us={t_crash * 1e6:.0f}"))
+
+    # -- recover: owner serves again only after repair (the gap) ----------
+    st = recover_shard(st, VICTIM)
+    st, f_gap, _, _ = _check_reads(st, keys, vals)
+    owners = _owners_of(st, keys)
+    gap = float(np.mean(~np.asarray(f_gap)))
+    gap_expect = float(np.mean(owners == VICTIM))
+    rows.append(Row("crash/availability_gap", 0.0,
+                    f"gap_frac={gap:.4f};owned_by_victim={gap_expect:.4f}"))
+
+    # -- anti-entropy repair: bounded rounds, converged diff --------------
+    t0 = time.perf_counter()
+    st, rep = migrate.repair_run(st, VICTIM, batch=512 if quick else 2048)
+    jax.block_until_ready(st.keys)
+    t_rep = time.perf_counter() - t0
+    diff_after = migrate.repair_diff(st, VICTIM)
+    st, f_fin, ok_fin, _ = _check_reads(st, keys, vals)
+    lost = int(np.sum(~np.asarray(f_fin)))
+    rows.append(Row("crash/repair", t_rep / max(rep["healed"], 1) * 1e6,
+                    f"healed={rep['healed']};rounds={rep['rounds']};"
+                    f"candidates={rep['n_candidates']};"
+                    f"present={rep['n_present']};diff_after={diff_after};"
+                    f"entries_per_s={rep['healed'] / max(t_rep, 1e-9):.0f}"))
+    rows.append(Row("crash/lost_acked", 0.0,
+                    f"acked={acked};lost={lost};vals_ok={int(ok_fin)}"))
+
+    obs.set_gauge("bench.crash.lost_acked", float(lost))
+    obs.set_gauge("bench.crash.outage_found_frac", outage_found)
+    obs.set_gauge("bench.crash.outage_vals_ok", float(ok_out and ok_fin))
+    obs.set_gauge("bench.crash.availability_gap", gap)
+    obs.set_gauge("bench.crash.diff_after", float(diff_after))
+    obs.set_gauge("bench.crash.repair_healed", float(rep["healed"]))
+    obs.set_gauge("bench.crash.repair_rounds", float(rep["rounds"]))
+    obs.set_gauge("bench.crash.write_wire_amp", amp)
+    obs.set_gauge("bench.crash.extra_write_rounds", float(extra_rounds))
+    obs.set_gauge("bench.crash.read_wire_ratio", read_wire_ratio)
+    return rows
+
+
+def main(quick: bool = True):
+    for r in run(quick):
+        print(r.csv())
+
+
+if __name__ == "__main__":
+    main(False)

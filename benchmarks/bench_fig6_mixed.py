@@ -62,11 +62,21 @@ def run(quick: bool = True):
                 table, _, found, r = dht_read(table, keys, valid=read_mask)
                 return table, found, w, r
 
+            # the measured batch keeps the paper's fixed per-shard
+            # window, but the PRELOAD must not be lossy: writing the raw
+            # (duplicate-heavy) stream through the fixed capacity
+            # overflowed the hot shard's window and silently lost ~39%
+            # of the entries (engine.dropped 28962, DESIGN.md §13), so
+            # "reads mostly hit" was quietly false.  Only UNIQUE keys
+            # matter for table contents — dedup the preload and let
+            # bounded retry absorb the residual shard imbalance.
+            kn = np.asarray(keys)
+            _, uniq = np.unique(kn, axis=0, return_index=True)
+            pk, pv = keys[jnp.asarray(uniq)], vals[jnp.asarray(uniq)]
+
             def once():
                 t = dht_create(cfg)
-                # preload so reads mostly hit (paper reads previously
-                # written entries)
-                t, _ = dht_write(t, keys, vals)
+                t, _ = dht_write(t, pk, pv, max_retries=2)
                 return mixed(t)
 
             t_m, (_, _val, found, code, es) = time_fn(once, iters=2, warmup=1)

@@ -133,7 +133,8 @@ stats_spec = {k: P() for k in
               ("mismatches", "rounds", "lock_tokens", "dropped", "epoch",
                "wire_words", "wire_send_words", "wire_reply_words",
                "fill_frac", "dispatch_rounds", "n_shards", "capacity",
-               "bin_counts", "bin_max_load", "bin_imbalance", "hot_frac")}
+               "bin_counts", "bin_max_load", "bin_imbalance", "hot_frac",
+               "fallback_reads")}
 sm = shard_map(fn, mesh=mesh, in_specs=(state_spec, bspec, bspec),
                out_specs=(state_spec, bspec, bspec, stats_spec))
 jf = jax.jit(sm)

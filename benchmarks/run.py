@@ -54,6 +54,7 @@ def main() -> None:
     from repro import obs
 
     from . import (
+        bench_crash,
         bench_fig3_server_vs_dht,
         bench_fig45_throughput,
         bench_fig6_mixed,
@@ -81,6 +82,7 @@ def main() -> None:
         "pipeline": bench_pipeline,
         "interp": bench_interp,
         "reshard": bench_resharding,
+        "crash": bench_crash,
         "roofline": bench_roofline,
         "scale": bench_scale_model,
     }

@@ -70,16 +70,22 @@ from .interp import (  # noqa: F401
     InterpConfig,
 )
 from .membership import (  # noqa: F401
+    MAX_REPLICAS,
     RingState,
     ring_create,
+    ring_crash,
     ring_join,
     ring_leave,
     ring_owner_of,
+    ring_recover,
     ring_resize,
+    ring_successors,
 )
 from .migrate import (  # noqa: F401
     Migration,
     MigrationPlan,
+    Repair,
+    RepairPlan,
     adopt_ring,
     dht_resize,
     migration_begin,
@@ -87,8 +93,22 @@ from .migrate import (  # noqa: F401
     migration_read,
     migration_step,
     plan_migration,
+    plan_repair,
+    repair_begin,
+    repair_diff,
+    repair_run,
+    repair_step,
     shard_join,
     shard_leave,
+)
+from .faults import (  # noqa: F401
+    FaultPlan,
+    crash_shard,
+    recover_shard,
+)
+from .dht import (  # noqa: F401
+    dht_write_replicated,
+    replica_placement,
 )
 from .surrogate import (  # noqa: F401
     SurrogateConfig,

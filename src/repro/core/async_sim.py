@@ -210,10 +210,34 @@ class IssueCommitOracle:
     schedules against this oracle; the promised-write hazard is the one
     case where the real engine needs extra machinery
     (``core.pipeline.PendingWrites``) to meet the oracle's answer.
+
+    **Replication / crash transitions (DESIGN.md §13).**  With a
+    ``placement`` function (key row -> ordered tuple of its k replica
+    shards, e.g. ``membership.ring_successors_np`` curried over the test
+    ring), the oracle also models the k-successor replication protocol
+    under the engine's write-once get-or-put semantics:
+
+    - a write lands copies on the LIVE members of the key's replica set
+      (a dead successor simply misses its copy until repair);
+    - a read is served by the first live shard in successor order — the
+      owner unless its liveness bit is down — and finds the key iff that
+      *serving* shard holds a copy.  A recovered-but-unrepaired owner
+      therefore misses keys its successors still hold: the documented
+      availability gap anti-entropy repair closes (under write-once
+      semantics the miss triggers a bit-identical recompute, so this is
+      an efficiency gap, never an inconsistency);
+    - ``crash`` wipes the shard's copies; a key whose LAST copy dies is
+      lost (as it is for real — k-1 simultaneous failures are the
+      design's tolerance bound);
+    - ``repair`` re-replicates every surviving key whose replica set
+      covers the shard — the oracle twin of ``migrate.repair_run``.
     """
 
-    def __init__(self):
+    def __init__(self, n_shards: int = 0, placement=None):
         self.table: dict[bytes, np.ndarray] = {}
+        self.holders: dict[bytes, set[int]] = {}
+        self.alive: list[bool] = [True] * int(n_shards)
+        self.placement = placement
         self._seq = 0
 
     @staticmethod
@@ -221,18 +245,41 @@ class IssueCommitOracle:
         return np.ascontiguousarray(
             np.asarray(key, dtype=np.uint32)).tobytes()
 
+    def _serving(self, row: bytes, key) -> bool:
+        """Replica-aware visibility: does the shard that would SERVE a
+        read of ``key`` (first live successor, owner first) hold a copy?
+        Placement-free oracles reduce to plain presence."""
+        if self.placement is None:
+            return row in self.table
+        if row not in self.table:
+            return False
+        for s in self.placement(key):
+            if s >= 0 and self.alive[s]:
+                return s in self.holders.get(row, ())
+        return False
+
     def issue_read(self, keys: np.ndarray):
         """Snapshot the keys now; returns a handle for :meth:`commit`."""
-        vals = [self.table.get(self._row(k)) for k in np.asarray(keys)]
+        ks = np.asarray(keys)
+        vals = [self.table.get(self._row(k))
+                if self._serving(self._row(k), k) else None for k in ks]
         self._seq += 1
         return ("read", self._seq,
                 [None if v is None else v.copy() for v in vals])
 
     def issue_write(self, keys: np.ndarray, vals: np.ndarray):
-        """Apply now (issue-order semantics); handle carries the count."""
+        """Apply now (issue-order semantics); handle carries the count.
+        With placement, copies land on the live replica-set members."""
         keys, vals = np.asarray(keys), np.asarray(vals)
         for k, v in zip(keys, vals):
-            self.table[self._row(k)] = np.asarray(v, np.uint32).copy()
+            row = self._row(k)
+            if self.placement is not None:
+                live = {s for s in self.placement(k)
+                        if s >= 0 and self.alive[s]}
+                if not live:
+                    continue  # whole replica set down: nothing acks
+                self.holders[row] = self.holders.get(row, set()) | live
+            self.table[row] = np.asarray(v, np.uint32).copy()
         self._seq += 1
         return ("write", self._seq, len(keys))
 
@@ -243,6 +290,40 @@ class IssueCommitOracle:
         if kind == "read":
             return payload, [v is not None for v in payload]
         return payload
+
+    # -- crash / recover / repair transitions (placement mode) ------------
+    def crash(self, shard: int) -> None:
+        """Abrupt death: the shard's copies are wiped; keys whose last
+        copy dies are lost (beyond the k-1 failure tolerance)."""
+        assert self.placement is not None, "crash needs a placement model"
+        self.alive[shard] = False
+        for row in list(self.holders):
+            self.holders[row].discard(shard)
+            if not self.holders[row]:
+                del self.holders[row]
+                self.table.pop(row, None)
+
+    def recover(self, shard: int) -> None:
+        """The shard returns, empty; :meth:`repair` re-converges it."""
+        assert self.placement is not None, "recover needs a placement model"
+        self.alive[shard] = True
+
+    def repair(self, shard: int, keys) -> int:
+        """Anti-entropy: re-replicate every surviving key whose replica
+        set covers ``shard``.  ``keys`` enumerates the candidate key rows
+        (the oracle stores only hashed rows, so the caller supplies the
+        originals).  Returns the healed-copy count."""
+        assert self.placement is not None, "repair needs a placement model"
+        healed = 0
+        for k in np.asarray(keys):
+            row = self._row(k)
+            if row not in self.table or row not in self.holders:
+                continue
+            if shard in tuple(self.placement(k)) \
+                    and shard not in self.holders[row]:
+                self.holders[row].add(shard)
+                healed += 1
+        return healed
 
 
 def run_mixed_workload(

@@ -56,6 +56,7 @@ from .op_engine import (
     migrate_ops,
     mixed_ops,
     read_ops,
+    replica_placement,
     write_ops,
 )
 
@@ -78,6 +79,7 @@ def _read_stats(valid, found, es, *, l1_meta: bool = False) -> dict:
         "mismatches": es["mismatches"],
         "dropped": es["dropped"],
         "lock_tokens": es["lock_tokens"],
+        "fallback_reads": es["fallback_reads"],
         **_wire_skew_stats(es),
     }
     if l1_meta:
@@ -136,6 +138,7 @@ def dht_write(
     *,
     axis_name: Any = None,
     l1_meta: bool = False,
+    max_retries: int = 0,
 ) -> tuple[DHTState, dict[str, jnp.ndarray]]:
     """DHT_write: store/update a batch of key-value pairs.
 
@@ -147,9 +150,135 @@ def dht_write(
     the reply lanes (stats gain ``wmark_post``, DESIGN.md §9) — required
     for every write issued while an L1 cache is attached, so the write is
     what invalidates the cached lines it obsoletes.
+
+    ``max_retries > 0`` opts into the bounded retry-on-overflow loop
+    (DESIGN.md §13, same contract as :meth:`ShardedDHT.write`): rows the
+    router dropped on a fixed-capacity overflow (``code == W_DROPPED``)
+    are re-issued up to ``max_retries`` extra rounds — a much thinner
+    batch almost always fits the same window.  Recovered drops are
+    relabelled ``engine.requeued`` in the registry so ``engine.dropped``
+    keeps meaning "lost for good" (what the CI ratio gate measures).
+    Host path only (retry needs the concrete drop count); the default 0
+    is bit-for-bit the single-round write.
     """
-    return dht_write_commit(dht_write_async(
+    state, stats = dht_write_commit(dht_write_async(
         state, keys, vals, valid, axis_name=axis_name, l1_meta=l1_meta))
+    if (max_retries <= 0 or axis_name is not None
+            or isinstance(stats["code"], jax.core.Tracer)):
+        return state, stats
+    total = stats
+    if valid is None:
+        valid = _ones(keys)
+    for _ in range(max_retries):
+        retry = valid & (total["code"] == W_DROPPED)
+        n_retry = int(jnp.sum(retry))
+        if n_retry == 0:
+            break
+        # the engine already flushed this round's drops; they are about
+        # to be re-issued, so move them dropped -> requeued
+        if obs_metrics.enabled():
+            reg = obs_metrics.get_registry()
+            reg.inc("engine.dropped", -n_retry)
+            reg.inc("engine.requeued", n_retry)
+        state, stats = dht_write_commit(dht_write_async(
+            state, keys, vals, retry, axis_name=axis_name, l1_meta=l1_meta))
+        for lane in ("inserted", "updated", "evicted", "lock_tokens",
+                     "wire_words", "wire_send_words", "wire_reply_words",
+                     "rounds"):
+            if lane in total and lane in stats:
+                total[lane] = total[lane] + stats[lane]
+        # a retried row's fresh outcome overrides its drop code
+        total["code"] = jnp.where(retry, stats["code"], total["code"])
+        total["dropped"] = jnp.sum(
+            (valid & (total["code"] == W_DROPPED)).astype(jnp.int32))
+        valid = retry
+    return state, total
+
+
+def dht_write_replicated(
+    state: DHTState,
+    keys: jnp.ndarray,
+    vals: jnp.ndarray,
+    valid: jnp.ndarray | None = None,
+    *,
+    axis_name: Any = None,
+    l1_meta: bool = False,
+) -> tuple[DHTState, dict[str, jnp.ndarray]]:
+    """DHT_write under k-successor replication (DESIGN.md §13): each
+    key-value pair fans out to all ``cfg.n_replicas`` distinct shards of
+    its successor set *inside one engine batch* — the same multi-
+    destination machinery as the dual-epoch read (``flatten_fanout`` +
+    precomputed placement), so replication costs wire words but ZERO
+    extra collective rounds.  ``base_bucket`` depends only on the low
+    hash lane, so every replica stores the key in the same probe window
+    of its own slab.
+
+    Copies destined to a dead shard are masked out of the routing (an
+    unreachable rank); a row is **acknowledged** when at least one live
+    replica applied it.  Per-row ``stats["code"]`` reports the first
+    applied copy's code (``W_DROPPED`` when no copy landed, so the
+    bounded retry loop treats an all-replicas-down row like an
+    overflow).  Extra lanes: ``replica_writes`` (secondary copies
+    applied — the write amplification), ``acked``.
+
+    At ``n_replicas == 1`` (or no ring) this IS :func:`dht_write` —
+    bit-for-bit, same trace."""
+    cfg = state.cfg
+    k = cfg.n_replicas
+    if k == 1 or state.ring is None:
+        state, stats = dht_write(state, keys, vals, valid,
+                                 axis_name=axis_name, l1_meta=l1_meta)
+        stats["replica_writes"] = jnp.int32(0)
+        stats["acked"] = (stats["inserted"] + stats["updated"]
+                          + stats["evicted"])
+        return state, stats
+    from .membership import ring_successors
+
+    if valid is None:
+        valid = _ones(keys)
+    n = keys.shape[0]
+    ring = state.ring
+    h_hi, h_lo = hash64(keys)
+    succ = ring_successors(ring, h_hi, k)                 # (n, k)
+    ok = (succ >= 0) & ring.alive[jnp.clip(succ, 0, cfg.n_shards - 1)]
+    cvalid = valid[:, None] & ok                          # (n, k) copies
+    fan_k = jnp.broadcast_to(keys[:, None, :], (n, k) + keys.shape[1:])
+    fan_v = jnp.broadcast_to(vals[:, None, :], (n, k) + vals.shape[1:])
+    flat_k, flat_valid = routing.flatten_fanout(fan_k, cvalid)
+    flat_v, _ = routing.flatten_fanout(fan_v, cvalid)
+    dest = jnp.where(flat_valid, succ.reshape(-1), 0).astype(jnp.int32)
+    hashes = (jnp.repeat(h_hi, k), jnp.repeat(h_lo, k))
+    cap = cfg.capacity
+    state, _, _val, _found, code, es = dht_execute(
+        state,
+        OpBatch(keys=flat_k, valid=flat_valid,
+                vals=flat_v.astype(jnp.uint32)),
+        kinds=("write",),
+        axis_name=axis_name,
+        capacity=(k * cap if cap else None),
+        hashes=hashes,
+        placement=(dest, ring.epoch),
+        l1_meta=l1_meta,
+    )
+    code2 = routing.unflatten_fanout(code, n, k)          # (n, k)
+    applied = cvalid & (code2 != W_DROPPED)
+    acked = jnp.any(applied, axis=-1)
+    first = jnp.argmax(applied, axis=-1)
+    code_row = jnp.take_along_axis(code2, first[:, None], axis=-1)[:, 0]
+    code_row = jnp.where(acked, code_row, jnp.int32(W_DROPPED))
+    stats = _write_stats(code_row, es, l1_meta=l1_meta)
+    n_applied = jnp.sum(applied).astype(jnp.int32)
+    n_acked = jnp.sum(acked).astype(jnp.int32)
+    stats["acked"] = n_acked
+    stats["replica_writes"] = n_applied - n_acked
+    # wrapper-level lanes: the engine's eager self-record only flushes
+    # estats, so the replication counters flush here (host path only —
+    # under jit/shard_map the ShardedDHT wrappers flush the stats dict)
+    if (obs_metrics.enabled() and axis_name is None
+            and not isinstance(n_acked, jax.core.Tracer)):
+        obs_metrics.inc("replica.writes", int(stats["replica_writes"]))
+        obs_metrics.inc("replica.acked_writes", int(n_acked))
+    return state, stats
 
 
 def dht_read_async(
@@ -235,7 +364,18 @@ def dht_read_cached(
     l1cfg = l1.cfg
     hashes = hash64(keys)
     set_idx, way_idx = l1cache.l1_slots(l1cfg, *hashes)
-    dest, epoch = _owner_epoch(state, hashes[0])
+    # crash-tolerant replica select (DESIGN.md §13): a dead owner's reads
+    # fall back to the first live successor; _owner_epoch handles this
+    # when replication is on, and we keep the fallback count as a lane.
+    # The L1 insert below stamps ``owner=dest`` — the SERVING shard — so
+    # a failover-filled line stays coherent against the successor's
+    # watermark, not the dead owner's.
+    if state.cfg.n_replicas > 1 and state.ring is not None:
+        dest, epoch, fb = replica_placement(state, hashes[0])
+        n_fallback = jnp.sum(valid & fb).astype(jnp.int32)
+    else:
+        dest, epoch = _owner_epoch(state, hashes[0])
+        n_fallback = jnp.int32(0)
     if axis_name is None:
         # full table in hand: recompute every shard's watermark, so even
         # out-of-band meta edits (tests, async host mutations) fence
@@ -244,7 +384,12 @@ def dht_read_cached(
         # own shard recomputed, the rest from the piggybacked table
         my = _flat_axis_index(axis_name)
         known = l1.shard_wmark.at[my].set(shard_watermark(state.meta[0]))
-    flags = l1cache.serve_flags(l1, known, epoch)
+    # the alive gate treats a failover as an epoch-class flush for the
+    # dead shard's lines — redundant today (ring_crash bumps the epoch,
+    # which already kills every pre-crash line) but it keeps the L1 safe
+    # even against a liveness flip that somehow skipped the epoch bump
+    alive = None if state.ring is None else state.ring.alive
+    flags = l1cache.serve_flags(l1, known, epoch, alive=alive)
     hit, cval = l1cache.l1_probe(l1cfg, l1, keys, set_idx, flags)
     hit = hit & valid
 
@@ -268,6 +413,7 @@ def dht_read_cached(
         "mismatches": es["mismatches"],
         "dropped": es["dropped"],
         "lock_tokens": es["lock_tokens"],
+        "fallback_reads": n_fallback,
         "epoch": es["epoch"],
         "wire_words": es["wire_words"],
         "fill_frac": es["fill_frac"],
@@ -514,7 +660,9 @@ __all__ = [
     "dht_write",
     "dht_write_async",
     "dht_write_commit",
+    "dht_write_replicated",
     "dual_fusable",
+    "replica_placement",
     "migrate_ops",
     "mixed_ops",
     "read_ops",

@@ -205,7 +205,8 @@ class ShardedDHT:
 
         stats_spec = {k: P() for k in
                       ("hits", "misses", "mismatches", "dropped",
-                       "lock_tokens", "epoch", "wire_words", "fill_frac")
+                       "lock_tokens", "epoch", "wire_words", "fill_frac",
+                       "fallback_reads")
                       + SKEW_KEYS}
         return jax.jit(
             shard_map(
@@ -243,7 +244,8 @@ class ShardedDHT:
                       ("mismatches", "rounds", "lock_tokens", "dropped",
                        "epoch", "wire_words", "wire_send_words",
                        "wire_reply_words", "fill_frac", "dispatch_rounds",
-                       "n_shards", "capacity") + SKEW_KEYS}
+                       "n_shards", "capacity", "fallback_reads")
+                      + SKEW_KEYS}
         return jax.jit(
             shard_map(
                 fn, mesh=self.mesh,
@@ -265,7 +267,8 @@ class ShardedDHT:
 
         stats_spec = {k: P() for k in
                       ("hits", "misses", "mismatches", "dropped",
-                       "lock_tokens", "epoch", "wire_words", "fill_frac")
+                       "lock_tokens", "epoch", "wire_words", "fill_frac",
+                       "fallback_reads")
                       + SKEW_KEYS}
         return jax.jit(
             shard_map(
@@ -296,7 +299,8 @@ class ShardedDHT:
 
         stats_spec = {k: P() for k in
                       ("hits", "misses", "l1_hits", "mismatches", "dropped",
-                       "lock_tokens", "epoch", "wire_words", "fill_frac")
+                       "lock_tokens", "epoch", "wire_words", "fill_frac",
+                       "fallback_reads")
                       + SKEW_KEYS}
         return jax.jit(
             shard_map(
@@ -337,6 +341,91 @@ class ShardedDHT:
             )
         )
 
+    # -- k-successor replication (DESIGN.md §13) ---------------------------
+    _WRITE_REP_KEYS = ("inserted", "updated", "evicted", "dropped",
+                       "rounds", "lock_tokens", "epoch", "wire_words",
+                       "fill_frac", "code", "acked", "replica_writes")
+
+    def write_replicated_fn(self, state: DHTState | None = None):
+        """Replicated write round (``dht.dht_write_replicated``): every
+        row fans to its k ring successors inside the SAME engine batch —
+        zero extra collective rounds, only wire words.  Selected by
+        :meth:`write` when ``cfg.n_replicas > 1``; the k=1 path keeps
+        using :meth:`write_fn` (bit-for-bit identical to before)."""
+        assert self.l1 is None, (
+            "L1 attached: write through write() (write_replicated_refresh_"
+            "fn) so the coherence watermarks refresh")
+        axes, state_spec, batch_spec = self._specs(state)
+
+        def fn(state, keys, vals, valid):
+            state, stats = dht_ops.dht_write_replicated(
+                state, keys, vals, valid, axis_name=axes)
+            return state, _psum_stats(stats, axes)
+
+        stats_spec = {k: (batch_spec if k == "code" else P())
+                      for k in self._WRITE_REP_KEYS + SKEW_KEYS}
+        return jax.jit(
+            shard_map(
+                fn, mesh=self.mesh,
+                in_specs=(state_spec, batch_spec, batch_spec, batch_spec),
+                out_specs=(state_spec, stats_spec),
+            )
+        )
+
+    def write_replicated_refresh_fn(self, state: DHTState | None = None):
+        """Replicated write that also refreshes the L1 coherence table
+        (the replica copies bump k shards' watermarks in one round)."""
+        axes, state_spec, batch_spec = self._specs(state)
+        l1_spec = self._l1_spec()
+
+        def fn(state, l1, keys, vals, valid):
+            state, stats = dht_ops.dht_write_replicated(
+                state, keys, vals, valid, axis_name=axes, l1_meta=True)
+            l1d = jax.tree.map(lambda x: x[0], l1)
+            l1d = l1cache.with_shard_wmarks(l1d, stats.pop("wmark_post"))
+            l1 = jax.tree.map(lambda x: x[None], l1d)
+            return state, l1, _psum_stats(stats, axes)
+
+        stats_spec = {k: (batch_spec if k == "code" else P())
+                      for k in self._WRITE_REP_KEYS + SKEW_KEYS}
+        return jax.jit(
+            shard_map(
+                fn, mesh=self.mesh,
+                in_specs=(state_spec, l1_spec, batch_spec, batch_spec,
+                          batch_spec),
+                out_specs=(state_spec, l1_spec, stats_spec),
+            )
+        )
+
+    def repair_fn(self, state: DHTState | None = None):
+        """Anti-entropy get-or-put round pinned to an explicit destination
+        (the recovered shard).  Replica-aware routing would deliver the
+        batch to the keys' live owners — where the copies already exist —
+        so the ``placement`` lane overrides it (DESIGN.md §13)."""
+        axes, state_spec, batch_spec = self._specs(state)
+
+        def fn(state, keys, vals, valid, dest):
+            ops = dht_ops.migrate_ops(keys, vals, valid)
+            state, _, _out, found, code, es = dht_ops.dht_execute(
+                state, ops, kinds=("migrate",), axis_name=axes,
+                placement=(dest, state.ring.epoch))
+            return state, found, code, _psum_stats(es, axes)
+
+        stats_spec = {k: P() for k in
+                      ("mismatches", "rounds", "lock_tokens", "dropped",
+                       "epoch", "wire_words", "wire_send_words",
+                       "wire_reply_words", "fill_frac", "dispatch_rounds",
+                       "n_shards", "capacity", "fallback_reads")
+                      + SKEW_KEYS}
+        return jax.jit(
+            shard_map(
+                fn, mesh=self.mesh,
+                in_specs=(state_spec, batch_spec, batch_spec, batch_spec,
+                          batch_spec),
+                out_specs=(state_spec, batch_spec, batch_spec, stats_spec),
+            )
+        )
+
     def read_many_refresh_fn(self, state: DHTState | None = None):
         """Neighborhood read that refreshes the L1 coherence table (the
         stencil fan-out itself is not L1-served, but its round may flag
@@ -354,7 +443,8 @@ class ShardedDHT:
 
         stats_spec = {k: P() for k in
                       ("hits", "misses", "mismatches", "dropped",
-                       "lock_tokens", "epoch", "wire_words", "fill_frac")
+                       "lock_tokens", "epoch", "wire_words", "fill_frac",
+                       "fallback_reads")
                       + SKEW_KEYS}
         return jax.jit(
             shard_map(
@@ -383,20 +473,74 @@ class ShardedDHT:
     # the round's (already psum'd) stat lanes into the telemetry registry
     # — the jitted bodies above never touch it (jit-safety, DESIGN.md
     # §10).  Per-process registries merge via obs.metrics.merge_snapshots.
-    def write(self, keys, vals, valid=None):
-        t0 = time.perf_counter()
-        valid = self._ones(keys.shape[0]) if valid is None else valid
+    def _write_dispatch(self, keys, vals, valid, extra=()):
+        """One write round through the cfg-selected closure: replicated
+        fan-out when ``cfg.n_replicas > 1`` (ring attached), the
+        unchanged single-copy path otherwise."""
+        replicated = self.cfg.n_replicas > 1 and self.ring is not None
         if self.l1 is not None:
-            fn = self._cached_fn("write_refresh", self.write_refresh_fn,
-                                 extra=(self.l1cfg,))
+            if replicated:
+                fn = self._cached_fn("write_replicated_refresh",
+                                     self.write_replicated_refresh_fn,
+                                     extra=(self.l1cfg,) + extra)
+            else:
+                fn = self._cached_fn("write_refresh", self.write_refresh_fn,
+                                     extra=(self.l1cfg,) + extra)
             self.state, self.l1, stats = fn(
                 self.state, self.l1, keys, vals, valid)
         else:
-            fn = self._cached_fn("write", self.write_fn)
+            if replicated:
+                fn = self._cached_fn("write_replicated",
+                                     self.write_replicated_fn, extra=extra)
+            else:
+                fn = self._cached_fn("write", self.write_fn, extra=extra)
             self.state, stats = fn(self.state, keys, vals, valid)
-        obs_trace.record_round("sharded.write", stats,
-                               ops={"write": int(keys.shape[0])}, t_start=t0)
         return stats
+
+    def write(self, keys, vals, valid=None, *, max_retries: int = 2):
+        """Write a batch; rows the router dropped on overflow are
+        re-issued up to ``max_retries`` times (satellite of DESIGN.md
+        §13: traced auto-capacity can under-provision a skewed round, and
+        a silently dropped insert is a lost acked write).  Only the FINAL
+        round's unrecovered drops stay on the ``dropped``/
+        ``engine.dropped`` lanes; recovered rows count as ``requeued``."""
+        valid = self._ones(keys.shape[0]) if valid is None else valid
+        n_ops = int(keys.shape[0])
+        total = None
+        attempt = 0
+        while True:
+            t_a = time.perf_counter()
+            stats = self._write_dispatch(keys, vals, valid)
+            code = stats["code"]
+            retry = valid & (code == dht_ops.W_DROPPED)
+            n_retry = int(jnp.sum(retry))
+            final = n_retry == 0 or attempt >= max_retries
+            flush = dict(stats)
+            if not final:
+                # this round's drops are about to be re-issued — flush
+                # them as requeued so engine.dropped keeps meaning
+                # "lost for good" (what the CI ratio gate measures)
+                flush["requeued"] = flush.pop("dropped")
+            obs_trace.record_round("sharded.write", flush,
+                                   ops={"write": n_ops}, t_start=t_a)
+            if total is None:
+                total = dict(stats)
+            else:
+                for lane in ("inserted", "updated", "evicted", "acked",
+                             "replica_writes", "lock_tokens", "wire_words",
+                             "rounds"):
+                    if lane in total:
+                        total[lane] = total[lane] + stats[lane]
+                # a retried row's fresh outcome overrides its drop code
+                total["code"] = jnp.where(code != dht_ops.W_DROPPED,
+                                          code, total["code"])
+                total["dropped"] = stats["dropped"]
+            if final:
+                total["write_retries"] = jnp.int32(attempt)
+                return total
+            attempt += 1
+            n_ops = n_retry
+            valid = retry
 
     def read(self, keys, valid=None):
         t0 = time.perf_counter()
@@ -467,16 +611,13 @@ class ShardedDHT:
         :meth:`write_commit`."""
         t0 = time.perf_counter()
         valid = self._ones(keys.shape[0]) if valid is None else valid
-        if self.l1 is not None:
-            fn = self._cached_fn("write_refresh", self.write_refresh_fn,
-                                 extra=(self.l1cfg,) + self._async_key())
-            self.state, self.l1, stats = fn(
-                self.state, self.l1, keys, vals, valid)
-        else:
-            fn = self._cached_fn("write", self.write_fn,
-                                 extra=self._async_key())
-            self.state, stats = fn(self.state, keys, vals, valid)
-        return ShardedRound(source="sharded.write", outs=(), stats=stats,
+        stats = self._write_dispatch(keys, vals, valid,
+                                     extra=self._async_key())
+        # no retry loop here — it would force a mid-pipeline fetch; the
+        # pipelined caller re-issues dropped rows itself (the surrogate
+        # driver retires only non-dropped keys from its PendingWrites)
+        return ShardedRound(source="sharded.write",
+                            outs=(stats["code"],), stats=stats,
                             ops={"write": int(keys.shape[0])}, t_start=t0,
                             t_issued=time.perf_counter())
 
@@ -605,6 +746,113 @@ class ShardedDHT:
 
         assert self.ring is not None, "join needs a ring"
         return self.apply_ring(ring_join(self.ring, shard_id), batch)
+
+    # -- crash tolerance (DESIGN.md §13) ----------------------------------
+    def crash(self, shard_id: int, *, wipe: bool = True) -> None:
+        """Abrupt shard death: liveness bit down, epoch + 1, placement
+        preserved (``membership.ring_crash``) and — by default — the dead
+        shard's slab rows wiped.  Reads fail over to ring successors in
+        the same number of collective rounds; with ``cfg.n_replicas > 1``
+        every acked write survives on the surviving copies.  The epoch
+        bump is the L1's crash fence (every pre-crash line goes
+        epoch-stale), so no explicit cache flush is needed."""
+        from .membership import ring_crash
+
+        assert self.ring is not None, "crash tolerance needs a ring"
+        new_ring = ring_crash(self.ring, shard_id)
+        keys, vals = self.state.keys, self.state.vals
+        meta, csum = self.state.meta, self.state.csum
+        if wipe:
+            keys = np.array(keys); keys[shard_id] = 0
+            vals = np.array(vals); vals[shard_id] = 0
+            meta = np.array(meta); meta[shard_id] = 0
+            csum = np.array(csum); csum[shard_id] = 0
+            keys, vals = jnp.asarray(keys), jnp.asarray(vals)
+            meta, csum = jnp.asarray(meta), jnp.asarray(csum)
+        final = DHTState(self.cfg, keys, vals, meta, csum, new_ring)
+        self.state = jax.device_put(final, _state_shardings(self.mesh, final))
+        obs_metrics.inc("faults.crashes")
+        obs_trace.record_event("sharded.crash", {"shard": shard_id,
+                                                 "wipe": int(wipe)})
+
+    def recover(self, shard_id: int) -> None:
+        """The crashed shard returns (empty) at epoch + 1; run
+        :meth:`repair` to re-converge its replica set."""
+        from .membership import ring_recover
+
+        assert self.ring is not None, "crash tolerance needs a ring"
+        final = DHTState(self.cfg, self.state.keys, self.state.vals,
+                         self.state.meta, self.state.csum,
+                         ring_recover(self.ring, shard_id))
+        self.state = jax.device_put(final, _state_shardings(self.mesh, final))
+        obs_metrics.inc("faults.recoveries")
+        obs_trace.record_event("sharded.recover", {"shard": shard_id})
+
+    def repair(self, shard_id: int, batch: int = 512) -> dict:
+        """Anti-entropy repair of a recovered shard on the sharded
+        backend: the generation-watermark diff (``migrate.plan_repair``)
+        enumerates exactly the replica copies the shard lost, then
+        bounded get-or-put batches stream them back through the
+        shard_map/all_to_all engine with an explicit placement lane —
+        low-priority background traffic on the query data path, NOT a
+        table scan (DESIGN.md §13)."""
+        from . import migrate  # local import: migrate is backend-agnostic
+
+        assert self.ring is not None and bool(self.ring.alive[shard_id]), (
+            "repair target must be recovered (live) first")
+        n_dev = self.mesh.devices.size
+        batch = -(-batch // n_dev) * n_dev
+        t0 = time.perf_counter()
+        plan = migrate.plan_repair(self.state, shard_id)
+
+        # explicit capacity: the whole batch routes to ONE destination
+        # bin, so each device's full local slice must fit (the traced
+        # auto heuristic assumes a spread and would drop most rows)
+        rep_cfg = dataclasses.replace(self.cfg, capacity=batch // n_dev)
+        rep_state = DHTState(rep_cfg, self.state.keys, self.state.vals,
+                             self.state.meta, self.state.csum, self.ring)
+        rep_state = jax.device_put(
+            rep_state, _state_shardings(self.mesh, rep_state))
+        fn = self._cached_fn("repair", lambda: self.repair_fn(rep_state),
+                             state=rep_state)
+
+        kw, vw = self.cfg.key_words, self.cfg.val_words
+        src_keys = np.asarray(self.state.keys).reshape(-1, kw)
+        src_vals = np.asarray(self.state.vals).reshape(-1, vw)
+        bspec = NamedSharding(self.mesh, P(mesh_axes(self.mesh)))
+        dest = jax.device_put(
+            jnp.full((batch,), shard_id, jnp.int32), bspec)
+        healed = skipped = rounds = 0
+        for lo in range(0, plan.n_missing, batch):
+            t_b = time.perf_counter()
+            idx = plan.src[lo:lo + batch]
+            n = int(idx.shape[0])
+            pad = np.zeros((batch,), np.int64)
+            pad[:n] = idx
+            keys = jax.device_put(jnp.asarray(src_keys[pad]), bspec)
+            vals = jax.device_put(jnp.asarray(src_vals[pad]), bspec)
+            valid = jax.device_put(jnp.asarray(np.arange(batch) < n), bspec)
+            rep_state, found, _code, es = fn(
+                rep_state, keys, vals, valid, dest)
+            obs_trace.record_round("sharded.repair", es,
+                                   ops={"migrate": n}, t_start=t_b)
+            assert int(es["dropped"]) == 0, "repair round overflowed"
+            healed += int(jnp.sum(valid & ~found))
+            skipped += int(jnp.sum(valid & found))
+            rounds += 1
+
+        final = DHTState(self.cfg, rep_state.keys, rep_state.vals,
+                         rep_state.meta, rep_state.csum, self.ring)
+        self.state = jax.device_put(final, _state_shardings(self.mesh, final))
+        result = {"n_candidates": plan.n_candidates,
+                  "n_present": plan.n_present,
+                  "n_planned": plan.n_missing,
+                  "healed": healed, "skipped": skipped, "rounds": rounds,
+                  "diff_after": migrate.repair_diff(self.state, shard_id)}
+        obs_metrics.inc("repair.rounds", rounds)
+        obs_metrics.inc("repair.keys_healed", healed)
+        obs_trace.record_event("sharded.repair_run", result, t_start=t0)
+        return result
 
 
 def make_mesh_1d(n: int | None = None, name: str = "dht") -> Mesh:

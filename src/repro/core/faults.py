@@ -1,0 +1,142 @@
+"""Fault injection for the replicated DHT (DESIGN.md §13).
+
+Two orthogonal fault classes, both deterministic so failures reproduce:
+
+- **Abrupt shard death** — :func:`crash_shard` flips the ring's liveness
+  bit *without* rebuilding placement (``membership.ring_crash``) and, by
+  default, wipes the dead shard's slab rows (its memory is gone — this is
+  a crash, not a graceful ``shard_leave``).  Every key's owner and
+  successor set survive, so readers fail over to the first live successor
+  and replicated writes keep landing on the surviving copies.
+  :func:`recover_shard` brings the shard back (empty); anti-entropy
+  repair (``core/migrate.plan_repair`` / ``repair_step``) heals it from
+  the surviving replicas.
+
+- **Message-level drops/delays** — an installed :class:`FaultPlan` makes
+  the op-engine (``op_engine.dht_issue``) deterministically drop a
+  fraction of each eligible round's rows before routing.  A dropped row
+  reports exactly like a routing overflow (``W_DROPPED`` / not-found), so
+  the retry paths under test (the bounded write-retry loop, the pipelined
+  surrogate's re-issue-from-PendingWrites path) cannot distinguish an
+  injected fault from a real one.  ``delay_us`` sleeps the host before
+  the issue — for perturbing the pipelined schedules.  Host-side and
+  eager-only by construction: traced (jit/shard_map) closures never
+  consult the plan, so fault injection cannot bake into a cached trace.
+
+The plan is module-global (one process = one fault domain); install with
+:func:`install` / :func:`clear` or the :func:`injected` context manager.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..obs import metrics as obs_metrics
+from .layout import DHTState
+from .membership import ring_crash, ring_recover
+
+__all__ = ["FaultPlan", "install", "clear", "get_plan", "injected",
+           "crash_shard", "recover_shard"]
+
+
+@dataclasses.dataclass
+class FaultPlan:
+    """Deterministic drop/delay schedule for engine rounds.
+
+    ``drop_frac`` of each eligible round's valid rows are masked out
+    before routing; eligibility is the round's op-kind set intersecting
+    ``kinds`` (default: write-ish rounds, the ones with retry paths).
+    The mask derives from ``(seed, round_counter)`` only, so a re-run
+    with the same plan and call sequence injects the same faults."""
+
+    seed: int = 0
+    drop_frac: float = 0.0
+    delay_us: float = 0.0
+    kinds: tuple[str, ...] = ("write", "migrate")
+    rounds_seen: int = 0
+    injected: int = 0
+
+    def perturb(self, ops, kinds: tuple[str, ...]):
+        """Apply this plan to one round's OpBatch (host/eager only —
+        the engine guards the call).  Returns the (possibly masked)
+        batch; injected rows surface as ``W_DROPPED``/not-found."""
+        if self.kinds and not (set(kinds) & set(self.kinds)):
+            return ops
+        self.rounds_seen += 1
+        if self.delay_us:
+            time.sleep(self.delay_us * 1e-6)
+        if not self.drop_frac:
+            return ops
+        rng = np.random.default_rng((self.seed, self.rounds_seen))
+        valid = np.asarray(ops.valid)
+        drop = (rng.random(valid.shape[0]) < self.drop_frac) & valid
+        n = int(drop.sum())
+        if n == 0:
+            return ops
+        self.injected += n
+        obs_metrics.inc("faults.injected_drops", n)
+        return type(ops)(keys=ops.keys,
+                         valid=ops.valid & jnp.asarray(~drop),
+                         op=ops.op, vals=ops.vals, esel=ops.esel)
+
+
+_PLAN: FaultPlan | None = None
+
+
+def install(plan: FaultPlan) -> None:
+    """Install the process-wide fault plan (replaces any existing one)."""
+    global _PLAN
+    _PLAN = plan
+
+
+def clear() -> None:
+    global _PLAN
+    _PLAN = None
+
+
+def get_plan() -> FaultPlan | None:
+    return _PLAN
+
+
+@contextlib.contextmanager
+def injected(**kw):
+    """``with injected(drop_frac=0.1, seed=3): ...`` — scoped plan."""
+    plan = FaultPlan(**kw)
+    install(plan)
+    try:
+        yield plan
+    finally:
+        clear()
+
+
+def crash_shard(state: DHTState, shard_id: int, *,
+                wipe: bool = True) -> DHTState:
+    """Abrupt shard death: liveness bit down, epoch + 1, placement
+    preserved (``membership.ring_crash``), and — unless ``wipe=False`` —
+    the dead shard's slab rows zeroed (its memory did not survive).  The
+    epoch bump is the L1's crash fence: every line cached before the
+    crash is epoch-stale and stops serving (DESIGN.md §13)."""
+    assert state.ring is not None, "crash tolerance needs a membership ring"
+    ring = ring_crash(state.ring, shard_id)
+    keys, vals, meta, csum = state.keys, state.vals, state.meta, state.csum
+    if wipe:
+        keys = keys.at[shard_id].set(jnp.uint32(0))
+        vals = vals.at[shard_id].set(jnp.uint32(0))
+        meta = meta.at[shard_id].set(jnp.uint32(0))
+        csum = csum.at[shard_id].set(jnp.uint32(0))
+    obs_metrics.inc("faults.crashes")
+    return DHTState(state.cfg, keys, vals, meta, csum, ring)
+
+
+def recover_shard(state: DHTState, shard_id: int) -> DHTState:
+    """The crashed shard returns (empty) at epoch + 1; run anti-entropy
+    repair (``core/migrate.repair_run``) to re-converge its replica set
+    from the surviving copies."""
+    assert state.ring is not None, "crash tolerance needs a membership ring"
+    obs_metrics.inc("faults.recoveries")
+    return DHTState(state.cfg, state.keys, state.vals, state.meta,
+                    state.csum, ring_recover(state.ring, shard_id))

@@ -170,15 +170,25 @@ def l1_slots(cfg: L1Config, h_hi, h_lo) -> tuple[jnp.ndarray, jnp.ndarray]:
     return set_idx, way_idx.astype(jnp.int32)
 
 
-def serve_flags(l1: L1State, known_wmark: jnp.ndarray, epoch) -> jnp.ndarray:
+def serve_flags(l1: L1State, known_wmark: jnp.ndarray, epoch,
+                alive: jnp.ndarray | None = None) -> jnp.ndarray:
     """(sets, ways) bool — which lines are coherent right now: live, of
     the current membership epoch, and stamped with their owner's latest
     known watermark.  Computed once per batch over the whole (small)
-    cache; the per-item probe then only key-compares."""
+    cache; the per-item probe then only key-compares.
+
+    ``alive`` (the ring's per-shard liveness, DESIGN.md §13) additionally
+    fences lines whose serving shard has crashed: a failover is an
+    epoch-class flush for the dead shard's sets.  ``ring_crash`` already
+    bumps the epoch (killing every pre-crash line), so this gate is
+    belt-and-braces for liveness flips that bypass the epoch stamp."""
     owner = jnp.clip(l1.owner, 0, known_wmark.shape[0] - 1)
-    return (l1.live
-            & (l1.epoch == jnp.asarray(epoch, jnp.int32))
-            & (l1.wmark == known_wmark[owner]))
+    ok = (l1.live
+          & (l1.epoch == jnp.asarray(epoch, jnp.int32))
+          & (l1.wmark == known_wmark[owner]))
+    if alive is not None:
+        ok = ok & alive[jnp.clip(l1.owner, 0, alive.shape[0] - 1)]
+    return ok
 
 
 def l1_probe(cfg: L1Config, l1: L1State, keys: jnp.ndarray,

@@ -43,11 +43,16 @@ class DHTConfig:
     mode: str = MODE_LOCKFREE
     capacity: int = 0            # routing capacity per (src, dst); 0 = auto
     max_read_retries: int = 2    # lock-free: re-get attempts before invalidating
+    n_replicas: int = 1          # k-successor replication (1 = paper's layout)
 
     def __post_init__(self):
         assert self.mode in MODES, self.mode
         assert self.n_probe >= 1
         assert self.buckets_per_shard >= self.n_probe
+        # replica sets come from the precomputed successor table, which is
+        # min(membership.MAX_REPLICAS, S) wide
+        assert 1 <= self.n_replicas <= min(self.n_shards, 4), (
+            self.n_replicas, self.n_shards)
 
     @property
     def bucket_bytes(self) -> int:

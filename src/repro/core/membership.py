@@ -34,6 +34,9 @@ SEED_RING = 0x7F4A7C15
 # dead ring slots sort past every real position
 DEAD_POSITION = np.uint32(0xFFFFFFFF)
 
+# widest replica set the successor table precomputes (k <= MAX_REPLICAS)
+MAX_REPLICAS = 4
+
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass(frozen=True)
@@ -45,6 +48,13 @@ class RingState:
     alive     : (S,) bool          per-shard liveness
     n_live    : ()  int32          live vnode count (prefix of positions)
     epoch     : ()  int32          bumped on every membership change
+    succ      : (n_slots, K) int32 first K distinct placement shards walking
+                                   the ring from each slot (col 0 = owner,
+                                   -1 pad); K = min(MAX_REPLICAS, S).  Built
+                                   at rebuild time, so a crash (which flips
+                                   ``alive`` without rebuilding) preserves
+                                   every key's replica set — readers gate on
+                                   ``alive`` to pick the first live entry.
     """
 
     positions: jnp.ndarray
@@ -52,11 +62,13 @@ class RingState:
     alive: jnp.ndarray
     n_live: jnp.ndarray
     epoch: jnp.ndarray
+    succ: jnp.ndarray = None
     n_virtual: int = 64
 
     def tree_flatten(self):
         return (
-            (self.positions, self.owners, self.alive, self.n_live, self.epoch),
+            (self.positions, self.owners, self.alive, self.n_live, self.epoch,
+             self.succ),
             self.n_virtual,
         )
 
@@ -83,6 +95,28 @@ def _vnode_positions(n_shards: int, n_virtual: int) -> np.ndarray:
     return np.asarray(murmur32_words(words, SEED_RING))
 
 
+def _successor_table(own: np.ndarray, n_live: int, k_max: int) -> np.ndarray:
+    """(n_slots, k_max) int32: first ``k_max`` distinct shards met walking
+    the sorted ring clockwise from each live slot (column 0 is the slot's
+    own owner, i.e. the key owner for hashes landing there); -1 pads when
+    fewer distinct shards exist.  Dead sentinel slots are all -1."""
+    n_slots = own.shape[0]
+    succ = np.full((n_slots, k_max), -1, np.int32)
+    if n_live == 0:
+        return succ
+    live = own[:n_live]
+    for i in range(n_live):
+        found = []
+        for step in range(n_live):
+            o = int(live[(i + step) % n_live])
+            if o not in found:
+                found.append(o)
+                if len(found) == k_max:
+                    break
+        succ[i, : len(found)] = found
+    return succ
+
+
 def _rebuild(alive: np.ndarray, n_virtual: int, epoch: int) -> RingState:
     """Host-side ring construction: sort live vnodes, sentinel-pad dead."""
     n_shards = int(alive.shape[0])
@@ -98,12 +132,14 @@ def _rebuild(alive: np.ndarray, n_virtual: int, epoch: int) -> RingState:
     order = np.argsort(pos, kind="stable")
     pos, own = pos[order], own[order]
     n_live = int(alive.sum()) * n_virtual
+    k_max = min(MAX_REPLICAS, n_shards)
     return RingState(
         positions=jnp.asarray(pos, jnp.uint32),
         owners=jnp.asarray(own, jnp.int32),
         alive=jnp.asarray(alive, bool),
         n_live=jnp.int32(n_live),
         epoch=jnp.int32(epoch),
+        succ=jnp.asarray(_successor_table(own, n_live, k_max), jnp.int32),
         n_virtual=n_virtual,
     )
 
@@ -124,6 +160,29 @@ def ring_owner_of(ring: RingState, h_hi: jnp.ndarray) -> jnp.ndarray:
     return ring_owner(h_hi, ring.positions, ring.owners, ring.n_live)
 
 
+def ring_successors(ring: RingState, h_hi: jnp.ndarray, k: int) -> jnp.ndarray:
+    """(..., k) int32 replica set of each key hash: the first k distinct
+    shards walking the ring clockwise from the key's successor vnode.
+    Column 0 is :func:`ring_owner_of`; -1 pads when fewer than k distinct
+    shards were placed at the last rebuild.  One ``searchsorted`` plus a
+    table gather — jit/shard_map safe (``k`` static)."""
+    assert 1 <= k <= ring.succ.shape[1], (k, ring.succ.shape)
+    idx = jnp.searchsorted(ring.positions, h_hi.astype(jnp.uint32),
+                           side="left")
+    idx = jnp.where(idx >= ring.n_live, 0, idx)
+    return ring.succ[idx, :k]
+
+
+def ring_successors_np(ring: RingState, h_hi: np.ndarray, k: int) -> np.ndarray:
+    """numpy twin of :func:`ring_successors` for host planners/oracles."""
+    assert 1 <= k <= ring.succ.shape[1], (k, ring.succ.shape)
+    pos = np.asarray(ring.positions)
+    succ = np.asarray(ring.succ)
+    idx = np.searchsorted(pos, np.asarray(h_hi, np.uint32), side="left")
+    idx = np.where(idx >= int(ring.n_live), 0, idx)
+    return succ[idx, :k].astype(np.int32)
+
+
 def ring_leave(ring: RingState, shard_id: int) -> RingState:
     """Shard departs (graceful leave or declared failure): epoch + 1."""
     alive = np.asarray(ring.alive).copy()
@@ -138,6 +197,39 @@ def ring_join(ring: RingState, shard_id: int) -> RingState:
     assert not alive[shard_id], f"shard {shard_id} is already live"
     alive[shard_id] = True
     return _rebuild(alive, ring.n_virtual, epoch=int(ring.epoch) + 1)
+
+
+def ring_crash(ring: RingState, shard_id: int) -> RingState:
+    """Abrupt shard death: flip the liveness bit and bump the epoch
+    WITHOUT rebuilding placement.  Unlike :func:`ring_leave` (graceful —
+    vnodes are removed and keys migrate to new owners), a crash must keep
+    every key's owner + successor set intact so its surviving replicas
+    still cover it; readers/writers gate on ``alive`` instead.  The epoch
+    bump is what fences the locality tier: every L1 line is epoch-stamped,
+    so a crash acts as an epoch-class flush (DESIGN.md §13)."""
+    alive = np.asarray(ring.alive).copy()
+    assert alive[shard_id], f"shard {shard_id} is not live"
+    alive[shard_id] = False
+    assert alive.any(), "cannot crash the last live shard"
+    return dataclasses.replace(
+        ring,
+        alive=jnp.asarray(alive, bool),
+        epoch=jnp.int32(int(ring.epoch) + 1),
+    )
+
+
+def ring_recover(ring: RingState, shard_id: int) -> RingState:
+    """Crashed shard returns with its placement slot: liveness back on,
+    epoch + 1 (its slab may be stale/empty — anti-entropy repair heals it
+    from the surviving replicas, ``core/migrate.plan_repair``)."""
+    alive = np.asarray(ring.alive).copy()
+    assert not alive[shard_id], f"shard {shard_id} is already live"
+    alive[shard_id] = True
+    return dataclasses.replace(
+        ring,
+        alive=jnp.asarray(alive, bool),
+        epoch=jnp.int32(int(ring.epoch) + 1),
+    )
 
 
 def ring_resize(ring: RingState, new_n_shards: int) -> RingState:
@@ -167,12 +259,17 @@ def ring_owner_np(ring: RingState, h_hi: np.ndarray) -> np.ndarray:
 
 
 __all__ = [
+    "MAX_REPLICAS",
     "RingState",
+    "ring_crash",
     "ring_create",
     "ring_join",
     "ring_leave",
     "ring_owner_np",
     "ring_owner_of",
+    "ring_recover",
     "ring_resize",
+    "ring_successors",
+    "ring_successors_np",
     "live_shards",
 ]

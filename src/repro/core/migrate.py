@@ -45,7 +45,7 @@ from .dht import (
     dht_read_dual,
     migrate_ops,
 )
-from .hashing import hash64
+from .hashing import base_bucket, hash64
 from .layout import INVALID, OCCUPIED, DHTConfig, DHTState, dht_create, dht_free
 from .membership import (
     RingState,
@@ -54,6 +54,7 @@ from .membership import (
     ring_leave,
     ring_owner_np,
     ring_resize,
+    ring_successors_np,
 )
 
 DEFAULT_BATCH = 256
@@ -374,10 +375,206 @@ def shard_join(
     return _run(migration_begin(state, ring_join(ring, shard_id), state.cfg, batch))
 
 
+# ---------------------------------------------------------------------------
+# Anti-entropy repair (DESIGN.md §13)
+#
+# After a crashed shard recovers (``faults.recover_shard``) its slab is
+# empty but its replica responsibilities are unchanged — ``ring_crash``
+# never rebuilt placement, so every key whose k-successor set contains
+# the shard has surviving copies on the other successors.  Repair streams
+# exactly those keys back through the engine's get-or-put lane:
+#
+# - **diff-driven, not a scan**: the candidate set is enumerated host-side
+#   from the surviving replicas (the keys whose ``ring_successors`` set
+#   covers the recovered shard), then filtered by the *generation
+#   watermark* of the destination probe window — a wiped bucket sits at
+#   generation 0, so a window whose meta words are all zero certainly
+#   lacks the key and skips the key-compare entirely.  Only windows the
+#   recovered shard has re-written since (nonzero generation) pay an
+#   exact key-equality check, and those keys drop out of the plan.
+# - **bounded batches on the query data path**: each ``repair_step`` is one
+#   OP_MIGRATE (get-or-put) round — the presence guard means a key the
+#   application re-wrote post-recovery is never clobbered by its replica
+#   copy (write-once publish semantics: the value is identical anyway,
+#   but the guard also makes repair idempotent and restartable).
+# - **convergence is checkable**: ``repair_diff`` re-runs the watermark
+#   diff; zero means the replica set is healed.
+
+
+@dataclasses.dataclass(frozen=True)
+class RepairPlan:
+    """The watermark diff: which surviving-replica entries the recovered
+    shard is missing."""
+
+    shard_id: int
+    src: np.ndarray       # (M,) flat src bucket ids holding a missing copy
+    n_candidates: int     # deduped keys whose replica set covers shard_id
+    n_present: int        # already at dest (re-written or prior repair)
+
+    @property
+    def n_missing(self) -> int:
+        return int(self.src.shape[0])
+
+
+def plan_repair(state: DHTState, shard_id: int) -> RepairPlan:
+    """Host-side diff of the recovered shard against its replica peers.
+
+    Enumerates live entries on *surviving* shards whose k-successor set
+    contains ``shard_id`` (the copies the dead shard should hold), dedupes
+    replica copies of the same key, and removes keys already present in
+    the destination probe window (the generation-watermark fast path: an
+    untouched window — all meta zero — skips the key compare)."""
+    cfg, ring = state.cfg, state.ring
+    assert ring is not None, "repair needs a membership ring"
+    s, b, kw = state.keys.shape
+    k = cfg.n_replicas
+    kflat = np.asarray(jnp.reshape(state.keys, (s * b, kw)))
+    h_hi, h_lo = hash64(jnp.reshape(state.keys, (s * b, kw)))
+    h_hi, h_lo = np.asarray(h_hi), np.asarray(h_lo)
+
+    succ = ring_successors_np(ring, h_hi, k)              # (S*B, k)
+    covered = (succ == shard_id).any(axis=-1)
+    row = np.repeat(np.arange(s, dtype=np.int32), b)
+    cand = _live_mask_np(state).reshape(-1) & covered & (row != shard_id)
+    idx = np.nonzero(cand)[0]
+    if idx.size:
+        # dedupe replica copies: one source per key (first flat slot wins)
+        _, first = np.unique(kflat[idx], axis=0, return_index=True)
+        idx = idx[np.sort(first)]
+    n_candidates = int(idx.size)
+
+    # generation-watermark diff against the destination probe windows
+    n_present = 0
+    if idx.size:
+        meta_d = np.asarray(state.meta[shard_id])          # (B,)
+        live_d = ((meta_d & OCCUPIED) != 0) & ((meta_d & INVALID) == 0)
+        base = np.asarray(base_bucket(jnp.asarray(h_lo[idx]), b, cfg.n_probe))
+        win = base[:, None] + np.arange(cfg.n_probe)       # (M, P) no wrap
+        touched = (meta_d[win] != 0).any(axis=-1)          # gen-0 fast path
+        present = np.zeros(idx.shape[0], bool)
+        t = np.nonzero(touched)[0]
+        if t.size:
+            keys_d = np.asarray(state.keys[shard_id])      # (B, KW)
+            wk = keys_d[win[t]]                            # (T, P, KW)
+            eq = (wk == kflat[idx[t], None, :]).all(axis=-1)
+            present[t] = (eq & live_d[win[t]]).any(axis=-1)
+        n_present = int(present.sum())
+        idx = idx[~present]
+
+    return RepairPlan(shard_id=shard_id, src=idx.astype(np.int64),
+                      n_candidates=n_candidates, n_present=n_present)
+
+
+@dataclasses.dataclass
+class Repair:
+    """An in-flight anti-entropy pass for one recovered shard."""
+
+    plan: RepairPlan
+    state: DHTState
+    batch: int = DEFAULT_BATCH
+    cursor: int = 0
+    healed: int = 0         # keys re-inserted at the recovered shard
+    skipped: int = 0        # present after all (racing write / re-plan)
+    rounds: int = 0
+
+    @property
+    def done(self) -> bool:
+        return self.cursor >= self.plan.n_missing
+
+
+def repair_begin(state: DHTState, shard_id: int,
+                 batch: int = DEFAULT_BATCH) -> Repair:
+    """Plan the diff and open a bounded repair stream.  The recovered
+    shard must already be live again (``faults.recover_shard``)."""
+    assert state.ring is not None and bool(state.ring.alive[shard_id]), (
+        "repair target must be recovered (live) first")
+    return Repair(plan=plan_repair(state, shard_id), state=state, batch=batch)
+
+
+def repair_step(rep: Repair) -> tuple[Repair, dict[str, int]]:
+    """Heal one bounded batch in ONE get-or-put round.
+
+    The round carries an explicit ``placement`` pinning every row to the
+    recovered shard — replica-aware routing would otherwise deliver the
+    batch to the keys' (live) owners, where the copies already exist."""
+    plan = rep.plan
+    if rep.done:
+        return rep, {"healed": 0, "skipped": 0, "remaining": 0}
+    t0 = time.perf_counter()
+    lo = rep.cursor
+    hi = min(lo + rep.batch, plan.n_missing)
+    idx = plan.src[lo:hi]
+    n = int(idx.shape[0])
+    pad = np.zeros((rep.batch,), np.int64)
+    pad[:n] = idx
+    valid = jnp.asarray(np.arange(rep.batch) < n)
+
+    st = rep.state
+    kw, vw = st.cfg.key_words, st.cfg.val_words
+    keys = jnp.reshape(st.keys, (-1, kw))[pad]
+    vals = jnp.reshape(st.vals, (-1, vw))[pad]
+
+    # like migration traffic: clear app capacity so the eager prologue
+    # sizes the round to the real bin load (all rows on ONE dest — the
+    # traced auto heuristic would assume a spread and drop most of them)
+    cfg_step = dataclasses.replace(st.cfg, capacity=0)
+    st = DHTState(cfg_step, st.keys, st.vals, st.meta, st.csum, st.ring)
+    dest = jnp.full((rep.batch,), plan.shard_id, jnp.int32)
+    st, _, _vals, found, code, es = dht_execute(
+        st, migrate_ops(keys, vals, valid), kinds=("migrate",),
+        placement=(dest, st.ring.epoch))
+    assert int(es["dropped"]) == 0, "repair round overflowed capacity"
+
+    rep.state = DHTState(rep.state.cfg, st.keys, st.vals, st.meta, st.csum,
+                         st.ring)
+    rep.cursor = hi
+    healed = int(jnp.sum(valid & ~found))
+    skipped = int(jnp.sum(valid & found))
+    rep.healed += healed
+    rep.skipped += skipped
+    rep.rounds += 1
+    step = {"healed": healed, "skipped": skipped,
+            "remaining": plan.n_missing - rep.cursor}
+    obs_metrics.inc("repair.rounds")
+    obs_metrics.inc("repair.keys_healed", healed)
+    obs_trace.record_event("repair.step", step, t_start=t0,
+                           ops={"migrate": n})
+    return rep, step
+
+
+def repair_diff(state: DHTState, shard_id: int) -> int:
+    """Convergence check: how many replica copies the shard still lacks
+    (0 after a completed repair — the acceptance gate)."""
+    return plan_repair(state, shard_id).n_missing
+
+
+def repair_run(state: DHTState, shard_id: int,
+               batch: int = DEFAULT_BATCH) -> tuple[DHTState, dict[str, int]]:
+    """Drive a full anti-entropy pass; returns the healed table + stats."""
+    rep = repair_begin(state, shard_id, batch)
+    while not rep.done:
+        rep, _ = repair_step(rep)
+    return rep.state, {
+        "n_candidates": rep.plan.n_candidates,
+        "n_present": rep.plan.n_present,
+        "n_planned": rep.plan.n_missing,
+        "healed": rep.healed,
+        "skipped": rep.skipped,
+        "rounds": rep.rounds,
+    }
+
+
 __all__ = [
     "DEFAULT_BATCH",
     "Migration",
     "MigrationPlan",
+    "Repair",
+    "RepairPlan",
+    "plan_repair",
+    "repair_begin",
+    "repair_diff",
+    "repair_run",
+    "repair_step",
     "stale_sources",
     "adopt_ring",
     "dht_resize",

@@ -56,6 +56,7 @@ import jax.numpy as jnp
 
 from ..obs import metrics as obs_metrics
 from ..obs import trace as obs_trace
+from . import faults as _faults
 from . import routing
 from .hashing import (
     base_bucket,
@@ -475,12 +476,42 @@ def _shard_apply(cfg: DHTConfig, prev_cfg: DHTConfig | None,
 # the engine
 # ---------------------------------------------------------------------------
 
+def replica_placement(state: DHTState, h_hi):
+    """Crash-tolerant placement under k-successor replication
+    (DESIGN.md §13): route to the key's owner unless its liveness bit is
+    down, in which case fall back to the first *live* shard of the key's
+    precomputed successor set.  Returns ``(dest, epoch, fallback)`` where
+    ``fallback`` marks items not served by their owner.  Requires a ring
+    and ``cfg.n_replicas > 1`` (the successor table's column 0 is the
+    owner, so a fully-live ring routes identically to ``ring_owner``)."""
+    from .membership import ring_successors
+
+    r = state.ring
+    succ = ring_successors(r, h_hi, state.cfg.n_replicas)   # (..., k)
+    own = succ[..., 0]
+    s = r.alive.shape[0]
+    ok = (succ >= 0) & r.alive[jnp.clip(succ, 0, s - 1)]
+    col = jnp.argmax(ok, axis=-1)
+    dest = jnp.take_along_axis(succ, col[..., None], axis=-1)[..., 0]
+    # no live replica at all (every successor down): keep the owner — the
+    # probe misses / the write drops, exactly like an unreachable rank
+    dest = jnp.where(jnp.any(ok, axis=-1), dest, own)
+    fallback = dest != own
+    return dest.astype(jnp.int32), r.epoch, fallback
+
+
 def _owner_epoch(state: DHTState, h_hi):
     """Owner placement under this table's membership: static modulo
-    (paper) or consistent-hash ring (DESIGN.md §4)."""
+    (paper) or consistent-hash ring (DESIGN.md §4).  With replication
+    enabled (``cfg.n_replicas > 1``) the owner lookup is the crash-
+    tolerant replica select — reads and writes transparently fail over
+    to the first live successor of a dead owner."""
     if state.ring is None:
         return owner_shard(h_hi, state.cfg.n_shards), jnp.int32(0)
     r = state.ring
+    if state.cfg.n_replicas > 1:
+        dest, epoch, _fb = replica_placement(state, h_hi)
+        return dest, epoch
     return ring_owner(h_hi, r.positions, r.owners, r.n_live), r.epoch
 
 
@@ -662,6 +693,16 @@ def dht_issue(
     cfg = state.cfg
     kinds = tuple(kinds)
     assert kinds and all(k in KINDS for k in kinds), kinds
+    # deterministic fault injection (core/faults.py): an installed plan
+    # may drop rows (they come back W_DROPPED / not-found, exactly like a
+    # routing overflow — the callers' retry paths can't tell the
+    # difference, which is the point) or delay the issue.  Host-side and
+    # eager-only: traced closures never see it.
+    fplan = _faults.get_plan()
+    if (fplan is not None
+            and not isinstance(ops.keys, jax.core.Tracer)
+            and not isinstance(state.keys, jax.core.Tracer)):
+        ops = fplan.perturb(ops, kinds)
     conflict = keys_np = None
     if pending is not None:
         assert kinds == ("read",) and prev is None and ops.op is None, (
@@ -700,6 +741,19 @@ def dht_issue(
            and not isinstance(ops.keys, jax.core.Tracer)
            and not isinstance(state.keys, jax.core.Tracer))
     t0 = time.perf_counter() if rec else 0.0
+    # replica-select lane (DESIGN.md §13): under k-successor replication
+    # the round's placement is the crash-tolerant first-live-replica
+    # select, and the count of items NOT served by their owner rides the
+    # stats as ``fallback_reads``.  Callers that precompute ``placement``
+    # (the L1 front end, the replicated write fan-out, repair) account
+    # for their own routing.
+    n_fallback = jnp.int32(0)
+    if (cfg.n_replicas > 1 and state.ring is not None
+            and placement is None and prev is None):
+        hashes = hash64(ops.keys) if hashes is None else hashes
+        dest_r, epoch_r, fb = replica_placement(state, hashes[0])
+        placement = (dest_r, epoch_r)
+        n_fallback = jnp.sum(ops.valid & fb).astype(jnp.int32)
     elidable = (axis_name is not None and kinds == ("read",)
                 and prev is None and ops.op is None)
     elide = elidable if elide_self is None else bool(elide_self)
@@ -872,6 +926,10 @@ def dht_issue(
         "bin_imbalance": (bmax * jnp.float32(cfg.n_shards)
                           / btotal).astype(jnp.float32),
         "hot_frac": (bmax / btotal).astype(jnp.float32),
+        # replication lane (DESIGN.md §13): items this round routed to a
+        # successor because their owner's liveness bit was down (always 0
+        # at k=1 — the lane exists so stats_specs stay shape-stable)
+        "fallback_reads": n_fallback,
     }
     if l1_meta:
         estats["bucket_gen"] = gen_out.astype(jnp.uint32)
@@ -1006,5 +1064,6 @@ __all__ = [
     "migrate_ops",
     "mixed_ops",
     "read_ops",
+    "replica_placement",
     "write_ops",
 ]

@@ -212,7 +212,8 @@ def lookup_or_compute_pipelined(
     number of hazard-filtered rows served by forwarding).
     """
     batches = list(batches)
-    totals = {"hits": 0, "misses": 0, "stored": 0, "forwarded": 0}
+    totals = {"hits": 0, "misses": 0, "stored": 0, "forwarded": 0,
+              "requeued": 0}
     outs: list = []
     founds: list = []
 
@@ -240,7 +241,32 @@ def lookup_or_compute_pipelined(
         "the pipelined driver is a host-loop scheduler — under jit use "
         "the fused get-or-put path of lookup_or_compute")
     pending = PendingWrites(cfg.dht.val_words)
-    wq = RoundQueue(depth, commit=dht_ops.dht_write_commit)
+
+    def _commit_write(w):
+        """Commit one write-back round and re-issue any rows the router
+        dropped on overflow (DESIGN.md §13 satellite: a silently dropped
+        insert is a lost published entry — the next epoch recomputes it).
+        Bounded retries; recovered rows count as ``requeued``.  The
+        promises were already retired at the following read's commit, so
+        a reader racing a dropped row recomputes (bit-identical value) —
+        the retry restores durability, not correctness."""
+        nonlocal state
+        _, wstats = dht_ops.dht_write_commit(w)
+        totals["stored"] += int(wstats["inserted"])
+        drop = w.meta["wmask_np"] & (
+            np.asarray(wstats["code"]) == dht_ops.W_DROPPED)
+        tries = 0
+        while drop.any() and tries < 2:
+            totals["requeued"] += int(drop.sum())
+            state, rstats = dht_ops.dht_write(
+                state, w.meta["wkeys"], w.meta["wvals"],
+                valid=jnp.asarray(drop))
+            totals["stored"] += int(rstats["inserted"])
+            drop = drop & (np.asarray(rstats["code"]) == dht_ops.W_DROPPED)
+            tries += 1
+        return wstats
+
+    wq = RoundQueue(depth, commit=_commit_write)
 
     def _issue_read(st, inputs):
         keys = make_keys(cfg, inputs)
@@ -287,20 +313,19 @@ def lookup_or_compute_pipelined(
             pending.publish(keys_np, np.asarray(wvals), miss_np)
             w = dht_ops.dht_write_async(state, keys, wvals, valid=miss)
             state = w.state
+            # _commit_write needs the round's rows to re-issue drops
+            w.meta.update(wkeys=keys, wvals=wvals, wmask_np=miss_np)
             # write issued: dataflow orders every read issued from here
             # on; the already-issued read-ahead may still forward, so
             # retirement waits for its commit (top of the next iteration)
             to_retire = (keys_np, miss_np)
-            done = wq.push(w)
-            if done is not None:
-                totals["stored"] += int(done[1]["inserted"])
+            wq.push(w)  # totals["stored"] accrues inside _commit_write
         else:
             outputs = unpack_floats(val_words, cfg.n_outputs)
         outs.append(outputs)
         founds.append(found)
         rd = nxt
-    for _st, wstats in wq.drain():
-        totals["stored"] += int(wstats["inserted"])
+    wq.drain()
     return _finish(state)
 
 
@@ -337,7 +362,7 @@ def _interp_tail(cfg: SurrogateConfig, inputs, points, val_words, found,
 
 # provenance lanes flushed to the registry by the lookup_* host paths
 _PROV_LANES = ("exact", "interpolated", "hits", "misses", "stored",
-               "probe_hits")
+               "probe_hits", "requeued")
 
 
 def _record_provenance(stats: dict) -> None:

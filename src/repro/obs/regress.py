@@ -35,7 +35,8 @@ import sys
 
 import numpy as np
 
-__all__ = ["extract_metrics", "classify", "compare", "TRAJECTORY_VERSION"]
+__all__ = ["extract_metrics", "classify", "compare", "dropped_ratio_gate",
+           "TRAJECTORY_VERSION"]
 
 TRAJECTORY_VERSION = 1
 
@@ -158,6 +159,26 @@ def compare(new: dict[str, float], base: dict[str, float], *,
     }
 
 
+def dropped_ratio_gate(metrics_flat: dict[str, float],
+                       max_ratio: float) -> dict | None:
+    """Silent-loss gate (DESIGN.md §13): the fraction of issued write ops
+    the engine dropped on the floor must stay below ``max_ratio``.
+
+    ``engine.dropped`` counts only UNRECOVERED drops — rows a bounded
+    retry round re-issued land on ``engine.requeued`` instead — so this
+    gates end-to-end write loss, not transient overflow pressure.
+    Returns a failure entry (compare() shape) or None."""
+    dropped = metrics_flat.get("counter.engine.dropped", 0.0)
+    writes = metrics_flat.get("counter.engine.ops.write", 0.0)
+    ratio = dropped / writes if writes else 0.0
+    if ratio <= max_ratio:
+        return None
+    return {"metric": "counter.engine.dropped_ratio", "kind": "count",
+            "baseline": max_ratio, "new": ratio,
+            "rel_delta": (ratio - max_ratio) / max_ratio if max_ratio
+            else float("inf")}
+
+
 def load_bench(path: str) -> dict:
     with open(path) as f:
         return json.load(f)
@@ -189,6 +210,12 @@ def main(argv: list[str] | None = None) -> int:
                     help="gate (not just report) time-metric regressions")
     ap.add_argument("--ignore-fingerprint", action="store_true",
                     help="compare despite differing run configurations")
+    ap.add_argument("--max-dropped-ratio", type=float, default=None,
+                    metavar="R",
+                    help="fail if counter.engine.dropped / "
+                         "counter.engine.ops.write exceeds R "
+                         "(unrecovered write loss; retried rows count "
+                         "as engine.requeued, not dropped)")
     args = ap.parse_args(argv)
 
     payloads = [load_bench(p) for p in args.bench]
@@ -224,6 +251,11 @@ def main(argv: list[str] | None = None) -> int:
 
     verdict = compare(new, traj.get("metrics", {}),
                       strict_time=args.strict_time)
+    if args.max_dropped_ratio is not None:
+        gate = dropped_ratio_gate(new, args.max_dropped_ratio)
+        if gate is not None:
+            verdict["failures"].append(gate)
+            verdict["verdict"] = "fail"
     verdict["fingerprint"] = fp
     verdict["baseline_fingerprint"] = traj.get("fingerprint")
     if args.out:

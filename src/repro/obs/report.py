@@ -87,6 +87,8 @@ def render_timeline(events: list[dict], last: int = 30) -> str:
         for key, label in (("wire_words", "wire"), ("fill_frac", "fill"),
                            ("bin_imbalance", "imb"), ("hot_frac", "hot"),
                            ("l1_hits", "l1"), ("dropped", "drop"),
+                           ("requeued", "rq"), ("fallback_reads", "fb"),
+                           ("replica_writes", "rep"), ("healed", "heal"),
                            ("overlap_frac", "ov")):
             if key in stats:
                 extras.append(f"{label}={_fmt_count(stats[key])}")

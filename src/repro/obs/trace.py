@@ -90,6 +90,15 @@ _COUNTER_LANES = {
     "hits": "dht.hits",
     "misses": "dht.misses",
     "l1_hits": "l1.hits",
+    # replication lanes (DESIGN.md §13): reads served by a successor
+    # because the owner's liveness bit was down, and secondary copies
+    # fanned into write rounds (write amplification = writes/acked)
+    "fallback_reads": "replica.fallback_reads",
+    "replica_writes": "replica.writes",
+    "acked": "replica.acked_writes",
+    # rows a bounded retry round re-issued after an overflow drop — the
+    # final round's unrecovered drops stay on engine.dropped
+    "requeued": "engine.requeued",
 }
 
 
